@@ -1,0 +1,60 @@
+"""Paper Figure 3 analogue: coefficient-line cover options for star
+stencils across orders — modelled op counts AND measured wall-clock for
+each option, in-cache (64^2/8^3) and out-of-cache (512^2/64^3) sizes."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coefficient_lines as cl
+from repro.core import matrixization as mx
+from repro.core import stencil_spec as ss
+
+
+def _time(fn, x, repeats=5):
+    fn(x).block_until_ready()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(repeats=5):
+    rows = []
+    cases = [(2, 64), (2, 512), (3, 8), (3, 64)]
+    for ndim, n in cases:
+        for r in (1, 2, 3):
+            spec = ss.star(ndim, r, seed=r)
+            dims = (n + 2 * r,) * ndim
+            x = jnp.asarray(np.random.default_rng(1).normal(size=dims),
+                            jnp.float32)
+            opts = ["parallel", "orthogonal"] + (["hybrid"] if ndim == 3 else [])
+            for opt in opts:
+                cover = cl.make_cover(spec, opt)
+                fn = jax.jit(lambda x, c=cover: mx.matrixized_apply(x, spec, c))
+                rows.append({
+                    "case": f"star{ndim}d_{n}", "order": r, "option": opt,
+                    "ops_model": cl.cover_outer_product_count(cover, min(n, 128)),
+                    "lines": len(cover.lines),
+                    "t_us": _time(fn, x, repeats) * 1e6,
+                })
+    return rows
+
+
+def main():
+    rows = run()
+    print("case,order,option,lines,ops_model,t_us")
+    for r in rows:
+        print(f"{r['case']},{r['order']},{r['option']},{r['lines']},"
+              f"{r['ops_model']},{r['t_us']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""LM-substrate microbenchmarks on CPU (smoke-scale): per-arch train-step
+and decode-step wall-clock so substrate regressions are visible."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.launch.input_specs import sample_from_specs, train_batch_specs
+from repro.optim.adamw import adamw
+from repro.train.serve_step import make_decode_step, make_prefill
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def run(archs=None, steps=3):
+    rows = []
+    opt = adamw(lr=1e-3)
+    for arch in archs or ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        batch = sample_from_specs(train_batch_specs(cfg, 2, 32), cfg, seed=0)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step = jax.jit(make_train_step(cfg, opt, ce_chunk=16))
+        state, m = step(state, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        train_us = (time.perf_counter() - t0) / steps * 1e6
+
+        prefill = jax.jit(make_prefill(cfg, max_len=40 + (cfg.num_image_tokens or 0)))
+        decode = jax.jit(make_decode_step(cfg))
+        kw = {k: batch[k] for k in ("patch_embeds", "cond") if k in batch}
+        last, st = prefill(state.params, batch["tokens"], **kw)
+        tok = batch["tokens"][..., :1]
+        _, st2 = decode(state.params, st, tok, cond=batch.get("cond"))
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            _, st2 = decode(state.params, st2, tok, cond=batch.get("cond"))
+        jax.block_until_ready(st2.length)
+        dec_us = (time.perf_counter() - t0) / steps * 1e6
+        rows.append({"arch": arch, "train_us": train_us, "decode_us": dec_us})
+    return rows
+
+
+def main():
+    print("arch,train_us_per_step,decode_us_per_token")
+    for r in run():
+        print(f"{r['arch']},{r['train_us']:.0f},{r['decode_us']:.0f}")
+    return run.__wrapped__ if False else None
+
+
+if __name__ == "__main__":
+    main()

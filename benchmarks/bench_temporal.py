@@ -1,0 +1,74 @@
+"""Beyond-paper: temporal fusion (paper §6 future work) — fused T-step
+sweep vs T sequential sweeps, measured wall-clock + modelled ratios."""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stencil_spec as ss
+from repro.core import coefficient_lines as cl
+from repro.core.engine import StencilEngine
+from repro.core.temporal import fuse_steps, fused_flops_ratio
+
+
+def v5e_roofline(spec, steps, n_grid):
+    """TPU-v5e per-sweep model: compute = 2*taps flops/point on the MXU;
+    traffic = read+write 4B/point per sweep.  Returns (seq_s, fused_s)."""
+    peak, bw = 197e12, 819e9
+    pts = n_grid ** spec.ndim
+    def sweep_terms(sp, sweeps):
+        comp = sweeps * 2 * sp.taps * pts / peak
+        traf = sweeps * 2 * 4 * pts / bw
+        return max(comp, traf), comp, traf
+    seq = sweep_terms(spec, steps)
+    fused = sweep_terms(fuse_steps(spec, steps), 1)
+    return seq, fused
+
+
+def _time(fn, x, repeats=5):
+    fn(x).block_until_ready()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(sizes=(256, 512), steps_list=(2, 4, 8), repeats=5):
+    rows = []
+    spec = ss.star(2, 1, seed=1)
+    for n in sizes:
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(n, n)),
+                        jnp.float32)
+        eng = StencilEngine(spec, boundary="periodic")
+        for steps in steps_list:
+            seq = jax.jit(lambda x, s=steps: eng.run(x, steps=s))
+            fused_spec = fuse_steps(spec, steps)
+            engf = StencilEngine(fused_spec, boundary="periodic")
+            fus = jax.jit(engf.step_fn())
+            t_seq = _time(seq, x, repeats)
+            t_fus = _time(fus, x, repeats)
+            err = float(jnp.abs(seq(x) - fus(x)).max())
+            seq_m, fus_m = v5e_roofline(spec, steps, n)
+            rows.append({"n": n, "steps": steps,
+                         "t_seq_us": t_seq * 1e6, "t_fused_us": t_fus * 1e6,
+                         "speedup": t_seq / t_fus,
+                         "flops_ratio_model": fused_flops_ratio(spec, steps, n),
+                         "v5e_speedup_model": seq_m[0] / fus_m[0],
+                         "max_err": err})
+    return rows
+
+
+def main():
+    print("n,steps,t_seq_us,t_fused_us,cpu_speedup,v5e_speedup_model,max_err")
+    for r in run():
+        print(f"{r['n']},{r['steps']},{r['t_seq_us']:.0f},{r['t_fused_us']:.0f},"
+              f"{r['speedup']:.2f},{r['v5e_speedup_model']:.2f},{r['max_err']:.1e}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

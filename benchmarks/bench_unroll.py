@@ -1,0 +1,75 @@
+"""Paper Figure 4 analogue: multi-dimensional unrolling / scheduling.
+
+On TPU the paper's (ui, uk) register unroll maps to the Pallas block shape
+(DESIGN.md §2); we sweep kernel block shapes and report the modelled VMEM
+working set + MXU op counts per block, plus interpret-mode wall-clock on a
+reduced grid (correctness-bearing, not wall-clock-representative)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coefficient_lines as cl
+from repro.core import stencil_spec as ss
+from repro.kernels import ops as kops
+from repro.kernels.stencil_mxu import build_kernel_plan
+
+
+def vmem_bytes(spec, block):
+    r = spec.order
+    slab = np.prod([b + 2 * r for b in block]) * 4
+    acc = np.prod(block) * 4
+    t = sum((block[a], block[a] + 2 * r) for a, _ in []) if False else 0
+    cover = cl.make_cover(spec, "parallel")
+    tmats = sum(block[l.axis] * (block[l.axis] + 2 * r) * 4
+                for l in cover.lines if l.nnz > 1)
+    return int(slab + acc + tmats)
+
+
+def run():
+    rows = []
+    cases = [(ss.box(2, 1, seed=1), [(8, 128), (16, 128), (64, 128), (128, 128), (256, 128)]),
+             (ss.box(3, 1, seed=2), [(1, 8, 128), (4, 8, 128), (8, 8, 128), (8, 16, 128)]),
+             (ss.star(3, 2, seed=3), [(1, 8, 128), (4, 8, 128), (8, 8, 128)])]
+    rng = np.random.default_rng(0)
+    for spec, blocks in cases:
+        r = spec.order
+        dims = (40,) * spec.ndim if spec.ndim == 2 else (12, 18, 20)
+        x = jnp.asarray(rng.normal(size=dims), jnp.float32)
+        for block in blocks:
+            cover = cl.make_cover(spec, "parallel")
+            plan = build_kernel_plan(spec, cover,
+                                     tuple(min(b, d - 2 * r) for b, d in
+                                           zip(block, dims)))
+            t0 = time.perf_counter()
+            out = kops.stencil_matrixized(
+                x, spec=spec, cover=cover,
+                block=tuple(min(b, d - 2 * r) for b, d in zip(block, dims)))
+            out.block_until_ready()
+            dt = time.perf_counter() - t0
+            rows.append({
+                "stencil": spec.describe(), "block": "x".join(map(str, block)),
+                "vmem_bytes": vmem_bytes(spec, block),
+                "mxu_dots_per_block": plan.mxu_dots,
+                "vpu_taps_per_block": plan.vpu_taps,
+                "interpret_ms": dt * 1e3,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("stencil,block,vmem_bytes,mxu_dots_per_block,vpu_taps_per_block,interpret_ms")
+    for r in rows:
+        print(f"{r['stencil']},{r['block']},{r['vmem_bytes']},"
+              f"{r['mxu_dots_per_block']},{r['vpu_taps_per_block']},"
+              f"{r['interpret_ms']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

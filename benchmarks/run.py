@@ -1,0 +1,72 @@
+"""Benchmark driver: one section per paper table/figure.
+
+``python -m benchmarks.run [--quick]`` prints CSV blocks:
+  [T1/T2/S3.4]  instruction-count tables (exact, asserted)
+  [FIG3]        coefficient-line option sweep
+  [FIG4]        unroll/block-shape sweep
+  [T3/FIG5]     speedups vs vectorized baselines (measured CPU wall-clock)
+  [LM]          per-architecture substrate microbench
+  [ROOFLINE]    dry-run roofline table (if dryrun_results/ exists)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / skip LM microbench")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_instruction_counts, bench_line_options,
+                            bench_stencil, bench_unroll)
+
+    print("== [T1/T2/S3.4] instruction counts (paper formulas, asserted) ==")
+    bench_instruction_counts.main()
+    print()
+    print("== [FIG3] coefficient-line options ==")
+    bench_line_options.main()
+    print()
+    print("== [FIG4] unroll / block shapes ==")
+    bench_unroll.main()
+    print()
+    print("== [T3/FIG5] speedups vs vectorized baselines ==")
+    if args.quick:
+        rows = bench_stencil.run(sizes_2d=(64, 128), sizes_3d=(8, 16),
+                                 orders=(1, 2), repeats=3)
+        keys = ["stencil", "n", "option", "t_naive_us", "t_ours_us",
+                "speedup_vs_naive", "op_ratio_model"]
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r.get(k, ''):.2f}" if isinstance(r.get(k), float)
+                           else str(r.get(k, "")) for k in keys))
+    else:
+        bench_stencil.main()
+    print()
+    print("== [TEMPORAL] beyond-paper: fused T-step sweeps (paper §6 future work) ==")
+    from benchmarks import bench_temporal
+    if args.quick:
+        rows = bench_temporal.run(sizes=(256,), steps_list=(2, 4), repeats=3)
+        print("n,steps,cpu_speedup,v5e_speedup_model,max_err")
+        for r in rows:
+            print(f"{r['n']},{r['steps']},{r['speedup']:.2f},"
+                  f"{r['v5e_speedup_model']:.2f},{r['max_err']:.1e}")
+    else:
+        bench_temporal.main()
+    print()
+    if not args.quick:
+        print("== [LM] substrate microbench (smoke configs) ==")
+        from benchmarks import bench_lm
+        bench_lm.main()
+        print()
+    if os.path.isdir("dryrun_results"):
+        print("== [ROOFLINE] dry-run roofline table ==")
+        from repro.launch import roofline
+        roofline.print_table("dryrun_results")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Distributed 2-D heat equation with halo exchange (end-to-end driver for
+the paper's technique at scale).
+
+Runs the stencil matrixization engine under shard_map on a device mesh:
+the grid is domain-decomposed, halos travel by collective-permute, and the
+interior update overlaps the exchange (DESIGN.md §6).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/pde_halo_exchange.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import box
+from repro.core.distributed import make_distributed_stepper
+from repro.core.engine import StencilEngine
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    n_dev = len(jax.devices())
+    gx = max(d for d in (1, 2, 4, 8) if n_dev % d == 0 and d * 1 <= n_dev)
+    gy = n_dev // gx
+    mesh = make_mesh((gx, gy), ("gx", "gy"))
+    print(f"devices={n_dev} mesh=({gx},{gy})")
+
+    # 2D9P heat-like stencil (normalized coefficients -> diffusion)
+    spec = box(2, 1, seed=0)
+    step = make_distributed_stepper(spec, mesh, ("gx", "gy"),
+                                    periodic=True, overlap=True, steps=10)
+
+    field = jnp.zeros((256, 256), jnp.float32).at[128, 128].set(1000.0)
+    out = field
+    for chunk in range(5):
+        out = step(out)
+        print(f"step {10 * (chunk + 1):3d}: mass={float(out.sum()):9.3f} "
+              f"peak={float(out.max()):.5f}")
+
+    # verify against the single-device engine
+    eng = StencilEngine(spec, boundary="periodic")
+    ref = field
+    for _ in range(50):
+        ref = eng(ref)
+    err = float(jnp.abs(out - ref).max())
+    print(f"max |distributed - single-device| after 50 steps: {err:.2e}")
+    assert err < 1e-4
+
+    # show the collective schedule proof
+    txt = jax.jit(step).lower(jax.ShapeDtypeStruct(field.shape, field.dtype)) \
+        .compile().as_text()
+    print(f"collective-permutes in compiled HLO: {txt.count('collective-permute')}")
+
+
+if __name__ == "__main__":
+    main()

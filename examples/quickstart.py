@@ -1,0 +1,50 @@
+"""Quickstart: stencil matrixization in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (PAPER_SUITE, StencilEngine, box, star, choose_cover,
+                        matrixized_apply, make_cover)
+from repro.core.codegen import generate_update
+from repro.kernels.ref import stencil_ref
+
+
+def main():
+    # 1. define a stencil (2D9P box, order 1) and inspect its duality
+    spec = box(2, 1, seed=0)
+    print("gather coefficients:\n", np.asarray(spec.gather_coeffs).round(3))
+    print("scatter coefficients (Eq.5 C^s = J C^g J):\n",
+          np.asarray(spec.scatter_coeffs).round(3))
+
+    # 2. pick a coefficient-line cover and evaluate via MXU-style matmuls
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(130, 130)),
+                    jnp.float32)
+    cover = make_cover(spec, "parallel")
+    y = matrixized_apply(x, spec, cover)
+    err = float(jnp.abs(y - stencil_ref(x, spec)).max())
+    print(f"\nmatrixized vs gather oracle: max err {err:.2e}")
+
+    # 3. the engine picks the cover by op-count model, runs any backend
+    eng = StencilEngine(star(2, 3, seed=1), option="auto", backend="pallas",
+                        block=(64, 64))
+    print(f"auto-chosen cover for star2d r=3: {eng.plan.option} "
+          f"({eng.plan.op_count()} outer-product-equivalents per block)")
+
+    # 4. the code generator (paper §4.4) emits the unrolled update
+    gen = generate_update(eng.plan)
+    print("\ngenerated kernel (head):")
+    print("\n".join(gen.source.splitlines()[:8]))
+
+    # 5. evolve a heat-like field 100 steps with periodic boundaries
+    eng2 = StencilEngine(box(2, 1, seed=3), boundary="periodic")
+    field = jnp.zeros((64, 64)).at[32, 32].set(100.0)
+    out = eng2.run(field, steps=100)
+    print(f"\nafter 100 steps: total mass {float(out.sum()):.3f} "
+          f"(conserved from {float(field.sum()):.3f}), "
+          f"peak {float(out.max()):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Stencil Matrixization core (the paper's contribution, in JAX).
+
+Public API:
+    StencilSpec / box / star / diagonal       -- repro.core.stencil_spec
+    make_cover / LineCover                    -- repro.core.coefficient_lines
+    matrixized_apply / separable_apply        -- repro.core.matrixization
+    StencilEngine / choose_cover              -- repro.core.engine
+    generate_update                           -- repro.core.codegen
+    make_distributed_stepper / halo_exchange  -- repro.core.distributed
+    evolve / evolve_until                     -- repro.core.time_stepper
+"""
+from repro.core.stencil_spec import StencilSpec, box, star, diagonal, from_gather_coeffs, PAPER_SUITE
+from repro.core.coefficient_lines import make_cover, LineCover, CoefficientLine
+from repro.core.matrixization import matrixized_apply, separable_apply, toeplitz_band
+from repro.core.engine import StencilEngine, StencilPlan, choose_cover, legal_covers
+
+__all__ = [
+    "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs", "PAPER_SUITE",
+    "make_cover", "LineCover", "CoefficientLine",
+    "matrixized_apply", "separable_apply", "toeplitz_band",
+    "StencilEngine", "StencilPlan", "choose_cover", "legal_covers",
+]

@@ -1,0 +1,143 @@
+"""Distributed stencil execution: domain decomposition + halo exchange.
+
+The paper's in-core scheduling (§4.3: fix the output block, stream inputs)
+scales out unchanged: each device owns a block of the grid, halos are the
+inter-device analogue of the overlapping BlockSpec windows, and the exchange
+is two ``lax.ppermute`` pairs per axis under ``shard_map``.
+
+Compute/communication overlap: the update is split into an *interior* region
+(needs no halo) and boundary strips (need it).  The permutes are issued
+first; XLA's async collectives then overlap the interior matmuls with the
+wire time — the schedule is visible in the compiled HLO
+(collective-permute-start ... interior dots ... collective-permute-done).
+
+The same machinery drives the production-mesh PDE example and the
+multi-pod dry-run for the paper's own workloads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.engine import StencilEngine
+from repro.core.stencil_spec import StencilSpec
+
+__all__ = ["halo_exchange", "distributed_stencil_step", "make_distributed_stepper"]
+
+
+def _exchange_axis(block: jnp.ndarray, axis: int, r: int, mesh_axis: str,
+                   periodic: bool) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Send our boundary strips to neighbours along one mesh axis.
+
+    Returns (lo_halo, hi_halo): the neighbour strips that belong on our low /
+    high side.  With non-periodic boundaries the edge devices receive zeros
+    (Dirichlet-0), matching the single-device engine's boundary="zero".
+    """
+    n_dev = lax.axis_size(mesh_axis)
+    idx = lax.axis_index(mesh_axis)
+
+    lo_strip = lax.slice_in_dim(block, 0, r, axis=axis)            # our low rows
+    hi_strip = lax.slice_in_dim(block, block.shape[axis] - r, block.shape[axis], axis=axis)
+
+    fwd = [(i, (i + 1) % n_dev) for i in range(n_dev)]             # i -> i+1
+    bwd = [(i, (i - 1) % n_dev) for i in range(n_dev)]             # i -> i-1
+    # halo on our low side comes from the previous device's high strip
+    lo_halo = lax.ppermute(hi_strip, mesh_axis, fwd)
+    hi_halo = lax.ppermute(lo_strip, mesh_axis, bwd)
+    if not periodic:
+        zero = jnp.zeros_like(lo_halo)
+        lo_halo = jnp.where(idx == 0, zero, lo_halo)
+        hi_halo = jnp.where(idx == n_dev - 1, jnp.zeros_like(hi_halo), hi_halo)
+    return lo_halo, hi_halo
+
+
+def halo_exchange(block: jnp.ndarray, r: int, mesh_axes: dict[int, str],
+                  periodic: bool = True) -> jnp.ndarray:
+    """Pad ``block`` with width-r halos fetched from mesh neighbours.
+
+    mesh_axes: {array_axis: mesh_axis_name} for each decomposed axis.
+    Must run inside shard_map.
+    """
+    out = block
+    for axis, mesh_axis in sorted(mesh_axes.items()):
+        lo, hi = _exchange_axis(out, axis, r, mesh_axis, periodic)
+        out = jnp.concatenate([lo, out, hi], axis=axis)
+    return out
+
+
+def distributed_stencil_step(block: jnp.ndarray, *, engine: StencilEngine,
+                             mesh_axes: dict[int, str], periodic: bool = True,
+                             overlap: bool = True) -> jnp.ndarray:
+    """One sharded stencil step on a local block (inside shard_map).
+
+    With ``overlap=True`` the interior update (independent of halos) is
+    expressed before the halo-dependent boundary strips so XLA can hide the
+    permute latency behind interior MXU work.
+    """
+    spec = engine.plan.spec
+    r = spec.order
+    core = engine.step_fn() if engine.plan.boundary == "valid" else None
+    if core is None:
+        raise ValueError("distributed stepper needs a 'valid'-mode engine")
+
+    haloed = halo_exchange(block, r, mesh_axes, periodic)
+
+    if not overlap:
+        return core(haloed)
+
+    # Interior: valid-mode update of the un-haloed block interior; exact for
+    # points at distance >= r from the local boundary.
+    interior = core(block)  # shape: block - 2r per decomposed axis
+
+    # Boundary strips: compute from the haloed block, then splice.
+    full = core(haloed)     # same shape as block
+    # Replace full's interior with the (identical, but halo-independent)
+    # interior computation; XLA CSEs if it wants, schedules early if it can.
+    nd_lead = block.ndim - spec.ndim
+    index = [slice(None)] * block.ndim
+    for axis in mesh_axes:
+        index[axis] = slice(r, block.shape[axis] - r)
+    for axis in range(nd_lead, block.ndim):
+        if axis not in mesh_axes:
+            # axis not decomposed: interior was computed valid on it too only
+            # if engine consumed halo there; engines here decompose all
+            # spatial axes, so this branch is for lead axes only.
+            pass
+    return full.at[tuple(index)].set(interior)
+
+
+def make_distributed_stepper(spec: StencilSpec, mesh: Mesh,
+                             grid_axes: tuple[str, ...],
+                             option: str = "auto", backend: str = "jnp",
+                             periodic: bool = True, overlap: bool = True,
+                             steps: int = 1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build a jit-ted multi-device stencil stepper.
+
+    ``grid_axes``: mesh axis name for each spatial array axis (use None-like
+    '' to leave an axis unsharded). The returned fn maps a global array
+    sharded as P(*grid_axes) to the evolved global array.
+    """
+    engine = StencilEngine(spec, option=option, backend=backend, boundary="valid")
+    mesh_axes = {i: ax for i, ax in enumerate(grid_axes) if ax}
+    pspec = P(*[ax if ax else None for ax in grid_axes])
+
+    def local_step(block):
+        return distributed_stencil_step(block, engine=engine, mesh_axes=mesh_axes,
+                                        periodic=periodic, overlap=overlap)
+
+    def global_step(x):
+        return lax.fori_loop(0, steps, lambda _, a: sharded(a), x) if steps > 1 else sharded(x)
+
+    sharded = shard_map(local_step, mesh=mesh, in_specs=pspec, out_specs=pspec,
+                        check_rep=False)
+    return jax.jit(global_step,
+                   in_shardings=NamedSharding(mesh, pspec),
+                   out_shardings=NamedSharding(mesh, pspec))

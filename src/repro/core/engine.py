@@ -1,0 +1,141 @@
+"""StencilEngine: plan (cover option x backend x block) -> executable update.
+
+The paper leaves "a performance model ... to determine the optimal option"
+as future work (§5.2); ``choose_cover`` supplies one — it scores every legal
+cover by modelled MXU/VPU op count at the engine's block size and picks the
+cheapest, which reproduces the paper's measured preferences (parallel for
+r=1 stars and all boxes, orthogonal for high-order stars).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coefficient_lines as cl
+from repro.core import matrixization as mx
+from repro.core.stencil_spec import StencilSpec
+
+__all__ = ["StencilPlan", "StencilEngine", "choose_cover", "legal_covers"]
+
+
+def legal_covers(spec: StencilSpec) -> list[str]:
+    opts = ["parallel"]
+    if spec.shape == "star":
+        opts.append("orthogonal")
+        if spec.ndim == 3:
+            opts.append("hybrid")
+    if spec.shape == "diagonal":
+        opts.append("diagonal")
+    if spec.ndim == 2:
+        opts.append("minimal")
+    return opts
+
+
+def choose_cover(spec: StencilSpec, n: int) -> tuple[str, cl.LineCover]:
+    """Performance-model cover selection: min modelled op count."""
+    best = None
+    for opt in legal_covers(spec):
+        cover = cl.make_cover(spec, opt)
+        cost = cl.cover_outer_product_count(cover, n)
+        # Orthogonal/diagonal covers on axes other than the contiguous one
+        # carry no TPU strided-gather penalty (DESIGN.md §2), so raw op count
+        # is the model.
+        if best is None or cost < best[0]:
+            best = (cost, opt, cover)
+    return best[1], best[2]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilPlan:
+    spec: StencilSpec
+    option: str
+    cover: cl.LineCover
+    backend: str          # "jnp" | "separable" | "pallas" | "codegen"
+    block: tuple[int, ...]
+    unroll: tuple[int, ...]
+    boundary: str         # "valid" | "zero" | "periodic"
+
+    def op_count(self, n: int | None = None) -> int:
+        return cl.cover_outer_product_count(self.cover, n or self.block[0])
+
+
+class StencilEngine:
+    """Plan and execute a stencil update.
+
+    Example:
+        eng = StencilEngine(spec, option="auto", backend="pallas")
+        y = eng(x)            # single step
+        y = eng.run(x, steps=100)
+    """
+
+    def __init__(self, spec: StencilSpec, option: str = "auto",
+                 backend: str = "jnp", block: tuple[int, ...] | None = None,
+                 unroll: tuple[int, ...] | None = None,
+                 boundary: str = "valid", interpret: bool = True):
+        if block is None:
+            block = (128, 128) if spec.ndim == 2 else (8, 128, 128)[:spec.ndim]
+        if option == "auto":
+            option, cover = choose_cover(spec, block[0])
+        else:
+            cover = cl.make_cover(spec, option)
+        if unroll is None:
+            unroll = (1,) * spec.ndim
+        self.plan = StencilPlan(spec=spec, option=option, cover=cover,
+                                backend=backend, block=tuple(block),
+                                unroll=tuple(unroll), boundary=boundary)
+        self.interpret = interpret
+        self._fn = self._build()
+
+    # -- construction -------------------------------------------------------
+    def _build(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        plan = self.plan
+        if plan.backend == "jnp":
+            core = functools.partial(mx.matrixized_apply, spec=plan.spec,
+                                     cover=plan.cover)
+        elif plan.backend == "separable":
+            core = functools.partial(mx.separable_apply, spec=plan.spec)
+        elif plan.backend == "codegen":
+            from repro.core.codegen import generate_update
+            core = generate_update(plan).fn
+        elif plan.backend == "pallas":
+            from repro.kernels import ops as kops
+            core = functools.partial(kops.stencil_matrixized, spec=plan.spec,
+                                     cover=plan.cover, block=plan.block,
+                                     interpret=self.interpret)
+        else:
+            raise ValueError(f"unknown backend {plan.backend!r}")
+        return self._wrap_boundary(core)
+
+    def _wrap_boundary(self, core):
+        plan = self.plan
+        r = plan.spec.order
+        nd = plan.spec.ndim
+        if plan.boundary == "valid":
+            return core
+
+        def padded(x):
+            pad = [(0, 0)] * (x.ndim - nd) + [(r, r)] * nd
+            mode = {"zero": "constant", "periodic": "wrap"}[plan.boundary]
+            return core(jnp.pad(x, pad, mode=mode))
+
+        return padded
+
+    # -- execution -----------------------------------------------------------
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._fn(x)
+
+    def step_fn(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        return self._fn
+
+    def run(self, x: jnp.ndarray, steps: int) -> jnp.ndarray:
+        """Multi-step evolution (requires a shape-preserving boundary)."""
+        if self.plan.boundary == "valid":
+            raise ValueError("multi-step needs boundary='zero'|'periodic'")
+        fn = self._fn
+        return jax.lax.fori_loop(0, steps, lambda _, a: fn(a), x)

@@ -1,0 +1,208 @@
+"""Stencil matrixization: outer-product sums as banded-Toeplitz matmuls.
+
+Paper Eq. 12 expresses one coefficient line's contribution to an n-row
+output block as ``2r+n`` vector outer products.  On TPU the accumulated sum
+of those rank-1 updates *is* a matmul:
+
+    sum_i  (slice_i of C° column) ⊗ A[i, :]   ==   T @ A_slab
+
+where ``T`` is the ``n x (n+2r)`` banded Toeplitz operator carrying the
+line's taps on its diagonals and ``A_slab`` the haloed input window.  This
+module builds those operators and evaluates stencils with them, in any
+dimension, for any line cover from :mod:`repro.core.coefficient_lines`.
+
+Gather/scatter bookkeeping: a scatter line (slice of Cs) along axis ``a``
+with fixed scatter offsets ``f_d`` equals the gather band
+``line.coeffs[::-1]`` applied at gather offsets ``(E-1) - f_d`` on the other
+axes (Cs = Cg reversed on every axis, Eq. 5).
+
+Beyond-paper (TPU-only) path: SVD-separable factorization
+``Cg = sum_p sigma_p u_p v_p^T`` evaluates a 2-D stencil as
+``sum_p  T_{u_p} @ A @ T_{v_p}^T`` — ``2*rank`` slab matmuls, impossible on
+SME (no right-multiply against an accumulator tile).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.coefficient_lines import CoefficientLine, LineCover
+from repro.core.stencil_spec import StencilSpec
+
+__all__ = [
+    "toeplitz_band",
+    "line_to_gather_band",
+    "matrixized_apply",
+    "separable_factors",
+    "separable_apply",
+    "matmul_count",
+    "mxu_flops",
+]
+
+
+def toeplitz_band(band: np.ndarray, n_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Banded Toeplitz operator T of shape (n_out, n_out + len(band) - 1).
+
+    ``T[k, k+s] = band[s]`` — contracting T against a haloed slab applies
+    the 1-D gather stencil ``band`` along the contracted axis.
+    """
+    band = np.asarray(band)
+    w = band.shape[0]
+    t = np.zeros((n_out, n_out + w - 1), dtype=np.float64)
+    rows = np.arange(n_out)
+    for s in range(w):
+        t[rows, rows + s] = band[s]
+    return jnp.asarray(t, dtype=dtype)
+
+
+def line_to_gather_band(line: CoefficientLine, spec: StencilSpec):
+    """(gather band, gather fixed offsets) for an axis-parallel scatter line."""
+    if line.is_diagonal:
+        raise ValueError("diagonal lines use skewed evaluation, not bands")
+    e = spec.extent
+    band = np.asarray(line.coeffs)[::-1]
+    fixed = {a: (e - 1) - v for a, v in line.fixed}
+    return band, fixed
+
+
+def _valid_shape(x_shape, ndim, r):
+    lead = x_shape[: len(x_shape) - ndim]
+    spatial = tuple(s - 2 * r for s in x_shape[len(x_shape) - ndim:])
+    if any(s <= 0 for s in spatial):
+        raise ValueError(f"input {x_shape} too small for order {r}")
+    return lead, spatial
+
+
+def _line_contribution(x: jnp.ndarray, spec: StencilSpec, line: CoefficientLine,
+                       dtype) -> jnp.ndarray:
+    """One line's contribution to the valid-mode output, as a matmul."""
+    ndim = spec.ndim
+    r = spec.order
+    lead_n = x.ndim - ndim
+    band, fixed = line_to_gather_band(line, spec)
+    axis = line.axis + lead_n
+
+    # Slice the slab: full halo along the line axis, pinned offset elsewhere.
+    index = [slice(None)] * x.ndim
+    for a_sp, off in fixed.items():
+        a = a_sp + lead_n
+        index[a] = slice(off, off + x.shape[a] - 2 * r)
+    slab = x[tuple(index)]
+
+    n_out = x.shape[axis] - 2 * r
+    t = toeplitz_band(band, n_out, dtype=dtype)
+    # Contract T's halo axis against the slab's line axis.
+    out = jnp.tensordot(t, slab, axes=((1,), (axis,)))
+    # tensordot puts the contracted result axis first; restore position.
+    return jnp.moveaxis(out, 0, axis)
+
+
+def _diagonal_contribution(x: jnp.ndarray, spec: StencilSpec,
+                           line: CoefficientLine, dtype) -> jnp.ndarray:
+    """Diagonal line: per-tap shifted accumulation (Eq. 16 family).
+
+    Each diagonal tap shifts every participating axis simultaneously; on TPU
+    this is cheapest as shifted-slab adds (the skew would otherwise force a
+    gather).  Kept for cover completeness.
+    """
+    ndim = spec.ndim
+    r = spec.order
+    e = spec.extent
+    lead_n = x.ndim - ndim
+    _, spatial = _valid_shape(x.shape, ndim, r)
+    out = jnp.zeros(x.shape[:lead_n] + spatial, dtype=dtype)
+    for o, c in enumerate(np.asarray(line.coeffs)):
+        if c == 0.0:
+            continue
+        index = [slice(None)] * x.ndim
+        # scatter index o along each (axis, dir); convert to gather offset.
+        offs = {a: (o if d > 0 else e - 1 - o) for a, d in line.axis}
+        for a, v in line.fixed:
+            offs[a] = v
+        for a_sp in range(ndim):
+            g = (e - 1) - offs[a_sp]  # gather offset
+            a = a_sp + lead_n
+            index[a] = slice(g, g + x.shape[a] - 2 * r)
+        out = out + jnp.asarray(c, dtype) * x[tuple(index)].astype(dtype)
+    return out
+
+
+def matrixized_apply(x: jnp.ndarray, spec: StencilSpec, cover: LineCover,
+                     accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Valid-mode stencil via the cover's banded-Toeplitz matmuls.
+
+    Leading axes of ``x`` beyond ``spec.ndim`` are batch axes.
+    """
+    lead, spatial = _valid_shape(x.shape, spec.ndim, spec.order)
+    out = jnp.zeros(lead + spatial, dtype=accum_dtype)
+    for line in cover.lines:
+        if line.is_diagonal:
+            out = out + _diagonal_contribution(x, spec, line, accum_dtype)
+        else:
+            out = out + _line_contribution(x, spec, line, accum_dtype)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: separable (SVD) factorization, 2-D
+# ---------------------------------------------------------------------------
+
+def separable_factors(spec: StencilSpec, tol: float = 1e-12):
+    """SVD of the 2-D gather tap matrix: list of (sigma*u, v) band pairs."""
+    if spec.ndim != 2:
+        raise ValueError("separable factorization implemented for 2-D")
+    u, s, vt = np.linalg.svd(spec.gather_coeffs)
+    keep = s > tol * s[0] if s[0] > 0 else s > 0
+    return [(u[:, p] * s[p], vt[p, :]) for p in np.nonzero(keep)[0]]
+
+
+def separable_apply(x: jnp.ndarray, spec: StencilSpec,
+                    accum_dtype=jnp.float32, tol: float = 1e-12) -> jnp.ndarray:
+    """2-D stencil as ``sum_p T_{u_p} @ A @ T_{v_p}^T`` (rank(Cg) slab pairs)."""
+    factors = separable_factors(spec, tol)
+    r = spec.order
+    lead_n = x.ndim - 2
+    n_i = x.shape[lead_n] - 2 * r
+    n_j = x.shape[lead_n + 1] - 2 * r
+    out = None
+    for ub, vb in factors:
+        ti = toeplitz_band(ub, n_i, dtype=accum_dtype)
+        tj = toeplitz_band(vb, n_j, dtype=accum_dtype)
+        # (..., i+2r, j+2r) -> contract i then j
+        tmp = jnp.tensordot(ti, x.astype(accum_dtype), axes=((1,), (lead_n,)))
+        tmp = jnp.moveaxis(tmp, 0, lead_n)
+        tmp = jnp.tensordot(tmp, tj, axes=((lead_n + 1,), (1,)))
+        out = tmp if out is None else out + tmp
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analysis (§3.4): operator counts and MXU flops
+# ---------------------------------------------------------------------------
+
+def matmul_count(cover: LineCover) -> int:
+    """Slab matmuls per output block = number of multi-tap lines (single-tap
+    lines degrade to scaled shifts — VPU work, no MXU op)."""
+    return sum(1 for line in cover.lines if line.nnz > 1)
+
+
+def mxu_flops(cover: LineCover, block: tuple[int, ...]) -> int:
+    """MXU flops to produce one output block via the cover.
+
+    Each multi-tap line contracts an (n, n+2r) Toeplitz against the slab:
+    2 * n * (n+2r) * prod(other block dims) flops (mul+add, the paper's
+    'full 2n^2 flops per instruction' observation).  Single-tap lines
+    contribute VPU flops, counted as 2 * prod(block).
+    """
+    r = cover.spec.order
+    total = 0
+    for line in cover.lines:
+        if line.is_diagonal or line.nnz <= 1:
+            total += 2 * int(np.prod(block)) * max(line.nnz, 1)
+            continue
+        ax = line.axis
+        n = block[ax]
+        rest = int(np.prod([b for a, b in enumerate(block) if a != ax]))
+        total += 2 * n * (n + 2 * r) * rest
+    return total

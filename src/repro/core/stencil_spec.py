@@ -1,0 +1,161 @@
+"""Stencil specifications: taps, gather/scatter duality (paper Eq. 1-6).
+
+A stencil is a constant-coefficient neighbourhood update on a structured
+grid.  The *gather* view (Eq. 1) computes one output from its neighbours;
+the *scatter* view (Eq. 3) fans one input out to its neighbours.  The two
+coefficient tensors are related by full index reversal, ``Cs = J Cg J``
+(Eq. 5) — in d dimensions, reversing every axis.
+
+Conventions (paper footnote 1): C-style storage; for 2-D stencils the index
+is (i, j) with j contiguous; for 3-D it is (i, j, k) with k contiguous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "StencilSpec",
+    "box",
+    "star",
+    "diagonal",
+    "from_gather_coeffs",
+    "PAPER_SUITE",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A constant-coefficient stencil.
+
+    Attributes:
+      ndim: spatial dimensionality (2 or 3 for the paper's suite; 1 is
+        supported on TPU via slab matrixization, see DESIGN.md §2).
+      order: radius r; the tap tensor has extent 2r+1 per axis.
+      gather_coeffs: the gather-mode coefficient tensor ``Cg`` of shape
+        (2r+1,)*ndim.  Entry ``Cg[o]`` multiplies input at offset
+        ``o - r`` relative to the output point (Eq. 1/2).
+      shape: descriptive tag ("box" | "star" | "diagonal" | "general").
+    """
+
+    ndim: int
+    order: int
+    gather_coeffs: np.ndarray
+    shape: str = "general"
+
+    def __post_init__(self):
+        c = np.asarray(self.gather_coeffs, dtype=np.float64)
+        object.__setattr__(self, "gather_coeffs", c)
+        expect = (2 * self.order + 1,) * self.ndim
+        if c.shape != expect:
+            raise ValueError(
+                f"gather_coeffs shape {c.shape} != {expect} for ndim="
+                f"{self.ndim}, order={self.order}"
+            )
+
+    # -- scatter duality (Eq. 5): Cs = J Cg J = reverse every axis ---------
+    @property
+    def scatter_coeffs(self) -> np.ndarray:
+        return self.gather_coeffs[(slice(None, None, -1),) * self.ndim]
+
+    @property
+    def taps(self) -> int:
+        """Number of non-zero coefficients."""
+        return int(np.count_nonzero(self.gather_coeffs))
+
+    @property
+    def extent(self) -> int:
+        return 2 * self.order + 1
+
+    def offsets(self) -> list[tuple[int, ...]]:
+        """Non-zero tap offsets in gather view (relative to the output)."""
+        idx = np.argwhere(self.gather_coeffs != 0.0)
+        return [tuple(int(x) - self.order for x in row) for row in idx]
+
+    def with_coeffs(self, gather_coeffs: np.ndarray) -> "StencilSpec":
+        return dataclasses.replace(self, gather_coeffs=np.asarray(gather_coeffs))
+
+    def describe(self) -> str:
+        names = {2: "2D", 3: "3D", 1: "1D"}
+        return f"{names.get(self.ndim, f'{self.ndim}D')}{self.taps}P {self.shape} (r={self.order})"
+
+
+def _rng_coeffs(shape, mask, seed):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.1, 1.0, size=shape)
+    c *= mask
+    # Normalize so repeated application stays bounded (heat-equation-like).
+    c /= c.sum()
+    return c
+
+
+def box(ndim: int, order: int, coeffs: np.ndarray | None = None, seed: int = 0) -> StencilSpec:
+    """Dense (2r+1)^d box stencil — e.g. 2D9P (ndim=2, r=1), 3D27P."""
+    ext = 2 * order + 1
+    shape = (ext,) * ndim
+    if coeffs is None:
+        coeffs = _rng_coeffs(shape, np.ones(shape), seed)
+    return StencilSpec(ndim=ndim, order=order, gather_coeffs=coeffs, shape="box")
+
+
+def star(ndim: int, order: int, coeffs: np.ndarray | None = None, seed: int = 0) -> StencilSpec:
+    """Axis-aligned star stencil — e.g. 2D5P (ndim=2, r=1), 3D7P.
+
+    Non-zeros only where all-but-one index equals r (Eq. 13).
+    """
+    ext = 2 * order + 1
+    shape = (ext,) * ndim
+    mask = np.zeros(shape)
+    center = (order,) * ndim
+    mask[center] = 1.0
+    for ax in range(ndim):
+        for o in range(ext):
+            idx = list(center)
+            idx[ax] = o
+            mask[tuple(idx)] = 1.0
+    if coeffs is None:
+        coeffs = _rng_coeffs(shape, mask, seed)
+    else:
+        coeffs = np.asarray(coeffs) * mask
+    return StencilSpec(ndim=ndim, order=order, gather_coeffs=coeffs, shape="star")
+
+
+def diagonal(order: int, coeffs: np.ndarray | None = None, seed: int = 0) -> StencilSpec:
+    """2-D stencil with non-zeros on main + anti diagonal only (Eq. 15)."""
+    ext = 2 * order + 1
+    mask = np.zeros((ext, ext))
+    for o in range(ext):
+        mask[o, o] = 1.0
+        mask[o, ext - 1 - o] = 1.0
+    if coeffs is None:
+        coeffs = _rng_coeffs((ext, ext), mask, seed)
+    else:
+        coeffs = np.asarray(coeffs) * mask
+    return StencilSpec(ndim=2, order=order, gather_coeffs=coeffs, shape="diagonal")
+
+
+def from_gather_coeffs(coeffs: np.ndarray, shape: str = "general") -> StencilSpec:
+    c = np.asarray(coeffs)
+    ndim = c.ndim
+    if len(set(c.shape)) != 1 or c.shape[0] % 2 != 1:
+        raise ValueError(f"coefficient tensor must be odd-cubic, got {c.shape}")
+    order = (c.shape[0] - 1) // 2
+    return StencilSpec(ndim=ndim, order=order, gather_coeffs=c, shape=shape)
+
+
+def PAPER_SUITE() -> dict[str, StencilSpec]:
+    """The paper's evaluation suite (§5): 2-D/3-D box and star, r = 1..3.
+
+    Orders match Table 3 (3-D box only up to r=2 there; we include r=3 for
+    completeness of the sweep).
+    """
+    suite: dict[str, StencilSpec] = {}
+    for r in (1, 2, 3):
+        suite[f"box2d_r{r}"] = box(2, r, seed=10 + r)
+        suite[f"star2d_r{r}"] = star(2, r, seed=20 + r)
+        suite[f"box3d_r{r}"] = box(3, r, seed=30 + r)
+        suite[f"star3d_r{r}"] = star(3, r, seed=40 + r)
+    suite["diag2d_r1"] = diagonal(1, seed=50)
+    return suite

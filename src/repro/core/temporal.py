@@ -1,0 +1,68 @@
+"""Temporal fusion — the paper's §6 future work, done analytically.
+
+The paper closes with "it is desirable to reuse data blocks over several
+time steps ... a combination of the two techniques [matrixization +
+temporal tiling] is our future work."  For constant-coefficient linear
+stencils the combination has a closed form: T applications of a stencil
+with gather taps ``C`` equal ONE application of the T-fold
+self-correlation ``C^(*T)`` (order T*r).  One fused sweep then reads the
+input once instead of T times — the memory-bound stencil's traffic drops
+~T-fold at the cost of a larger (but still banded) coefficient line, i.e.
+more MXU work, which is exactly the trade the roofline favours.
+
+Boundary semantics: exact for 'valid'; for 'zero' (Dirichlet-0) the fused
+operator is exact away from the boundary and matches the unfused evolution
+everywhere because zero padding commutes with correlation; for 'periodic'
+it is exact at any size >= the fused extent (wrap-around composition).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
+
+__all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio"]
+
+
+def _correlate_full(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Full-mode n-D cross-correlation of gather tap tensors.
+
+    Applying stencil B after stencil A equals applying taps
+    ``(A *full* B)`` — gather offsets add, so the composed tap at offset o
+    is sum over u+v=o of A[u]B[v] (a convolution of the offset-indexed
+    taps; since both are stored offset-ascending this is plain full
+    convolution of the arrays).
+    """
+    out_shape = tuple(sa + sb - 1 for sa, sb in zip(a.shape, b.shape))
+    out = np.zeros(out_shape, dtype=np.float64)
+    for idx in np.ndindex(*a.shape):
+        sl = tuple(slice(i, i + sb) for i, sb in zip(idx, b.shape))
+        out[sl] += a[idx] * b
+    return out
+
+
+def fuse_steps(spec: StencilSpec, steps: int) -> StencilSpec:
+    """Spec whose single application equals ``steps`` applications."""
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    c = np.asarray(spec.gather_coeffs, np.float64)
+    acc = c
+    for _ in range(steps - 1):
+        acc = _correlate_full(acc, c)
+    return from_gather_coeffs(acc, shape="box")
+
+
+def fused_flops_ratio(spec: StencilSpec, steps: int, n: int = 128) -> float:
+    """MXU-op ratio fused/unfused for the parallel cover (napkin model):
+    unfused: steps x (2r+1) lines of (n+2r) products;
+    fused:   (2Tr+1) lines of (n+2Tr) products."""
+    r = spec.order
+    unfused = steps * (2 * r + 1) * (n + 2 * r)
+    rt = steps * r
+    fused = (2 * rt + 1) * (n + 2 * rt)
+    return fused / unfused
+
+
+def fused_traffic_ratio(steps: int) -> float:
+    """HBM traffic ratio fused/unfused: one read+write instead of T."""
+    return 1.0 / steps

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: causal banded sequence mixer.
+
+The LM-stack instantiation of stencil matrixization (DESIGN.md §2/§5): a
+1-D causal constant-band stencil over a (seq, d) slab — token-shift, short
+convolution, local mixing.  On SME the paper rules 1-D stencils out (input
+vectors must span two directions); on TPU the channel axis supplies the
+second direction and the whole update is one banded-Toeplitz matmul per
+sequence tile:
+
+    y[t, :] = sum_{s<W} band[s] * x[t-s, :]     ==    T @ x_slab
+
+Shared-band mode runs on the MXU; per-channel (depthwise) mode is the
+paper's degenerate single-nonzero-line case and runs as W unrolled VPU
+scaled shifts inside the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+__all__ = ["banded_mixer_pallas_call"]
+
+
+def _shared_kernel(w: int, bt: int, out_dtype):
+    def kernel(x_ref, t_ref, o_ref):
+        slab = x_ref[...].astype(jnp.float32)      # (bt + w - 1, bd)
+        t = t_ref[...]                             # (bt, bt + w - 1)
+        acc = jax.lax.dot_general(
+            t, slab, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = acc.astype(out_dtype)
+    return kernel
+
+
+def _depthwise_kernel(w: int, bt: int, out_dtype):
+    def kernel(x_ref, band_ref, o_ref):
+        slab = x_ref[...].astype(jnp.float32)      # (bt + w - 1, bd)
+        band = band_ref[...].astype(jnp.float32)   # (w, bd)
+        acc = jnp.zeros((bt, slab.shape[1]), jnp.float32)
+        for s in range(w):                         # degenerate lines: VPU
+            acc = acc + band[s][None, :] * slab[w - 1 - s: w - 1 - s + bt, :]
+        o_ref[...] = acc.astype(out_dtype)
+    return kernel
+
+
+def banded_mixer_pallas_call(x: jnp.ndarray, band: jnp.ndarray,
+                             block_t: int = 128, block_d: int = 128,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Causal banded mix of a (T, D) slab with zero history.
+
+    band: (W,) shared across channels (MXU path) or (W, D) depthwise
+    (degenerate VPU path).  T, D must be multiples of the blocks (ops pads).
+    """
+    t_len, d = x.shape
+    w = band.shape[0]
+    if t_len % block_t or d % block_d:
+        raise ValueError(f"(T={t_len}, D={d}) not multiples of block "
+                         f"({block_t}, {block_d})")
+    grid = (t_len // block_t, d // block_d)
+    # Zero history: pad W-1 in front of time.
+    xp = jnp.pad(x, ((w - 1, 0), (0, 0)))
+
+    in_specs = [pl.BlockSpec((pl.Element(block_t + w - 1), pl.Element(block_d)),
+                             lambda i, j: (i * block_t, j * block_d))]
+    if band.ndim == 1:
+        # T[p, p + u] = band[w - 1 - u]  (gather band reversed; see module doc)
+        tt = np.zeros((block_t, block_t + w - 1), np.float32)
+        rows = np.arange(block_t)
+        bb = np.asarray(band, np.float64)
+        for u in range(w):
+            tt[rows, rows + u] = bb[w - 1 - u]
+        const = jnp.asarray(tt)
+        in_specs.append(pl.BlockSpec(tt.shape, lambda i, j: (0, 0)))
+        kernel = _shared_kernel(w, block_t, x.dtype)
+    else:
+        const = jnp.asarray(band, jnp.float32)
+        in_specs.append(pl.BlockSpec((w, block_d), lambda i, j: (0, j)))
+        kernel = _depthwise_kernel(w, block_t, x.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_t, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t_len, d), x.dtype),
+        interpret=interpret,
+    )(xp, const)

@@ -1,0 +1,175 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, batch axes, differentiation (custom
+VJPs built from the adjoint stencil), and the interpret/compiled switch.
+On this CPU container kernels always run with ``interpret=True``; on TPU
+the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coefficient_lines as cl
+from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
+from repro.kernels import ref as kref
+from repro.kernels import stencil_mxu
+from repro.kernels import banded_mixer as bm
+
+__all__ = ["stencil_matrixized", "banded_mix"]
+
+
+def _pad_to_multiple(x, block, r):
+    """Zero-pad the haloed input so the valid output tiles evenly."""
+    pads = []
+    out_pad = []
+    for s, b in zip(x.shape, block):
+        out = s - 2 * r
+        extra = (-out) % b
+        pads.append((0, extra))
+        out_pad.append(extra)
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x, out_pad
+
+
+def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
+                       cover: cl.LineCover | None = None,
+                       block: tuple[int, ...] | None = None,
+                       option: str = "parallel",
+                       interpret: bool = True) -> jnp.ndarray:
+    """Valid-mode stencil via the Pallas MXU kernel. Batch axes lead."""
+    if cover is None:
+        cover = cl.make_cover(spec, option)
+    if block is None:
+        block = (128, 128) if spec.ndim == 2 else (8, 8, 128)
+    block = tuple(min(b, x.shape[x.ndim - spec.ndim + a] - 2 * spec.order)
+                  for a, b in enumerate(block))
+    plan = stencil_mxu.build_kernel_plan(spec, cover, block)
+
+    def single(xs):
+        xs_p, out_pad = _pad_to_multiple(xs, block, spec.order)
+        out = stencil_mxu.stencil_pallas_call(xs_p, plan, interpret=interpret)
+        index = tuple(slice(0, s) for s in
+                      (d - 2 * spec.order for d in xs.shape))
+        return out[index]
+
+    lead = x.ndim - spec.ndim
+    fn = single
+    for _ in range(lead):
+        fn = jax.vmap(fn)
+    return fn(x)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable banded causal mixer (LM integration)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def banded_mix(x: jnp.ndarray, band: jnp.ndarray, block_t: int = 128,
+               block_d: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """Differentiable causal banded mix: y[t] = sum_s band[s] x[t-s].
+
+    x: (..., T, D).  band: (W,) shared or (W, D) depthwise.
+    """
+    return _banded_fwd_impl(x, band, block_t, block_d, interpret)
+
+
+def _banded_fwd_impl(x, band, block_t, block_d, interpret):
+    t_len, d = x.shape[-2], x.shape[-1]
+    bt = min(block_t, t_len)
+    bd = min(block_d, d)
+    pt = (-t_len) % bt
+    pd = (-d) % bd
+
+    def single(xs):
+        xs_p = jnp.pad(xs, ((0, pt), (0, pd))) if (pt or pd) else xs
+        band_p = band if band.ndim == 1 or pd == 0 else jnp.pad(band, ((0, 0), (0, pd)))
+        out = bm.banded_mixer_pallas_call(xs_p, band_p, bt, bd, interpret=interpret)
+        return out[:t_len, :d]
+
+    fn = single
+    for _ in range(x.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(x)
+
+
+def _banded_fwd(x, band, block_t, block_d, interpret):
+    return _banded_fwd_impl(x, band, block_t, block_d, interpret), (x, band)
+
+
+def _banded_bwd(block_t, block_d, interpret, res, g):
+    x, band = res
+    w = band.shape[0]
+    # dx: anti-causal mix with the same band == flip-mix-flip.
+    gf = jnp.flip(g, axis=-2)
+    dxf = _banded_fwd_impl(gf, band, block_t, block_d, interpret)
+    dx = jnp.flip(dxf, axis=-2).astype(x.dtype)
+    # dband[s] = sum_t g[t] * x[t-s]  (shared: also sum over channels)
+    t_len = x.shape[-2]
+    shifted = []
+    for s in range(w):
+        xs = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(s, 0), (0, 0)])[..., :t_len, :]
+        shifted.append(xs)
+    xs_stack = jnp.stack(shifted, axis=0)  # (W, ..., T, D)
+    if band.ndim == 1:
+        dband = jnp.einsum("...td,w...td->w", g.astype(jnp.float32),
+                           xs_stack.astype(jnp.float32)).astype(band.dtype)
+    else:
+        dband = jnp.einsum("...td,w...td->wd", g.astype(jnp.float32),
+                           xs_stack.astype(jnp.float32)).astype(band.dtype)
+    return dx, dband
+
+
+banded_mix.defvjp(_banded_fwd, _banded_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable stencil (learnable-coefficient demo + adjoint tests)
+# ---------------------------------------------------------------------------
+
+def stencil_apply_vjp(x: jnp.ndarray, gather_coeffs: jnp.ndarray,
+                      interpret: bool = True):
+    """Valid stencil with gradients w.r.t. both input and coefficients.
+
+    Forward runs the Pallas kernel; the backward pass IS another stencil —
+    the adjoint of valid correlation is the zero-padded correlation with the
+    scatter coefficients (gather/scatter duality, Eq. 5, used as math not
+    just as derivation).
+    """
+
+    @jax.custom_vjp
+    def apply(x, c):
+        spec = from_gather_coeffs(np.asarray(jax.core.concrete_or_error(
+            None, c, "coefficients must be concrete for kernel planning")))
+        return stencil_matrixized(x, spec=spec, interpret=interpret)
+
+    def fwd(x, c):
+        return apply(x, c), (x, c)
+
+    def bwd(res, g):
+        x, c = res
+        c_np = np.asarray(c)
+        spec = from_gather_coeffs(c_np)
+        r, nd = spec.order, spec.ndim
+        lead = x.ndim - nd
+        pad = [(0, 0)] * lead + [(2 * r, 2 * r)] * nd
+        adj_spec = from_gather_coeffs(np.asarray(spec.scatter_coeffs))
+        dx = kref.stencil_ref(jnp.pad(g, pad), adj_spec).astype(x.dtype)
+        # dC[o] = sum_p g[p] * x[p + o]
+        grads = []
+        for off in np.ndindex(*c_np.shape):
+            index = [slice(None)] * lead + [
+                slice(o, o + x.shape[lead + a] - 2 * r)
+                for a, o in enumerate(off)]
+            grads.append(jnp.vdot(g.astype(jnp.float32),
+                                  x[tuple(index)].astype(jnp.float32)))
+        dc = jnp.stack(grads).reshape(c_np.shape).astype(c.dtype)
+        return dx, dc
+
+    apply.defvjp(fwd, bwd)
+    return apply(x, gather_coeffs)

@@ -1,0 +1,152 @@
+"""Cell construction: (architecture x shape cell) -> lowerable function.
+
+Shared by the dry-run, the roofline reporter, and the perf iterations:
+one place defines what each of the 40 assignment cells lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, SHAPE_CELLS, ShapeCell,
+                                cells_for, get_config)
+from repro.launch import input_specs as ispec
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWState, adamw
+from repro.sharding import rules
+from repro.train.serve_step import ServeState, make_decode_step, make_prefill
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["CellSpec", "build_cell", "MODEL_FLOPS"]
+
+
+class CellSpec(NamedTuple):
+    fn: Any                 # callable to jit
+    args: tuple             # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    donate: tuple           # argnums
+    meta: dict
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _state_shardings(mesh, state_sds: TrainState):
+    p_sh = rules.param_shardings(mesh, state_sds.params)
+    opt_sh = AdamWState(step=_replicated(mesh),
+                        mu=rules.param_shardings(mesh, state_sds.opt.mu),
+                        nu=rules.param_shardings(mesh, state_sds.opt.nu))
+    return TrainState(params=p_sh, opt=opt_sh, step=_replicated(mesh))
+
+
+def _cache_shardings(mesh, caches_sds, seq_shard: bool):
+    return rules.cache_shardings(mesh, caches_sds, seq_axis_shard=seq_shard)
+
+
+def build_cell(arch: str, cell_name: str, mesh: Mesh,
+               cfg: ModelConfig | None = None, ce_chunk: int = 512) -> CellSpec:
+    import dataclasses
+    cfg = cfg or get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    # dry-run posture: SPMD-friendly kernel impls; MoE dispatch grouped by
+    # the data-parallel degree (shard-local capacity, no global sort)
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    overrides: dict = {"kernel_impl": "ref"}
+    if cfg.moe is not None:
+        overrides["moe"] = dataclasses.replace(cfg.moe, groups=dp)
+    cfg = dataclasses.replace(cfg, **overrides)
+    optimizer = adamw(lr=3e-4)
+
+    if cell.kind == "train":
+        import os
+        microbatches = int(os.environ.get("REPRO_MICROBATCHES", "1"))
+        state_sds = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, optimizer))
+        batch_sds = ispec.train_batch_specs(cfg, cell.global_batch, cell.seq_len)
+        step = make_train_step(cfg, optimizer, ce_chunk=ce_chunk,
+                               microbatches=microbatches)
+        state_sh = _state_shardings(mesh, state_sds)
+        batch_sh = rules.batch_shardings(mesh, batch_sds)
+        return CellSpec(fn=step, args=(state_sds, batch_sds),
+                        in_shardings=(state_sh, batch_sh),
+                        out_shardings=(state_sh, None),
+                        donate=(0,),
+                        meta={"arch": arch, "cell": cell_name, "kind": "train"})
+
+    params_sds = jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    params_sh = rules.param_shardings(mesh, params_sds)
+
+    if cell.kind == "prefill":
+        batch_sds = ispec.prefill_specs(cfg, cell.global_batch, cell.seq_len)
+        prefill = make_prefill(cfg, max_len=cell.seq_len)
+
+        def fn(params, batch):
+            return prefill(params, batch["tokens"],
+                           patch_embeds=batch.get("patch_embeds"),
+                           cond=batch.get("cond"))
+
+        batch_sh = rules.batch_shardings(mesh, batch_sds)
+        return CellSpec(fn=fn, args=(params_sds, batch_sds),
+                        in_shardings=(params_sh, batch_sh),
+                        out_shardings=None, donate=(),
+                        meta={"arch": arch, "cell": cell_name, "kind": "prefill"})
+
+    # decode: one token against a cache of cell.seq_len
+    seq_shard = cell_name == "long_500k"
+    caches_sds = jax.eval_shape(
+        lambda: tf.init_caches(cfg, cell.global_batch, cell.seq_len))
+    length_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    state_sds = ServeState(caches=caches_sds, length=length_sds)
+    tok_sds = ispec.decode_specs(cfg, cell.global_batch)
+    decode = make_decode_step(cfg)
+
+    def fn(params, state, batch):
+        return decode(params, state, batch["token"], cond=batch.get("cond"))
+
+    cache_sh = ServeState(caches=_cache_shardings(mesh, caches_sds, seq_shard),
+                          length=_replicated(mesh))
+    tok_sh = rules.batch_shardings(mesh, tok_sds)
+    return CellSpec(fn=fn, args=(params_sds, state_sds, tok_sds),
+                    in_shardings=(params_sh, cache_sh, tok_sh),
+                    out_shardings=(None, cache_sh), donate=(1,),
+                    meta={"arch": arch, "cell": cell_name, "kind": "decode"})
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (roofline's MODEL_FLOPS term)
+# ---------------------------------------------------------------------------
+
+def MODEL_FLOPS(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N_active*D for
+    forward-only cells.  D = processed tokens per step; N excludes
+    embedding tables (standard convention)."""
+    n_params = cfg.param_count()
+    emb = cfg.vocab_size * cfg.d_model * max(cfg.num_codebooks, 1)
+    head = 0 if cfg.tie_embeddings else emb
+    n_body = n_params - emb - head
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_params = cfg.num_layers * m.num_experts * 3 * cfg.d_model * m.d_ff_expert
+        active = n_body - expert_params + expert_params * (m.top_k / m.num_experts)
+    else:
+        active = n_body
+    # head matmul is real compute: add 2*D*V per token (forward)
+    head_flops_per_tok = 2 * cfg.d_model * cfg.vocab_size * max(cfg.num_codebooks, 1)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * active * tokens + 3.0 * head_flops_per_tok * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * active * tokens + head_flops_per_tok * cell.global_batch
+    tokens = cell.global_batch  # decode: 1 token per sequence
+    return 2.0 * active * tokens + head_flops_per_tok * tokens

@@ -1,0 +1,86 @@
+"""Input specifications per (architecture x shape cell).
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStructs (dry-run: no device
+allocation); ``sample_inputs`` returns concrete arrays of the same tree
+(smoke tests, examples).  Modality frontends are stubs per the assignment:
+MusicGen gets precomputed conditioning embeddings, LLaVA precomputed vision
+patch embeddings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+__all__ = ["train_batch_specs", "prefill_specs", "decode_specs",
+           "sample_from_specs", "specs_for_cell"]
+
+
+def _tok_dtype():
+    return jnp.int32
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    """{tokens, labels[, patch_embeds, cond]} ShapeDtypeStructs."""
+    sds = jax.ShapeDtypeStruct
+    specs = {}
+    if cfg.num_codebooks:
+        specs["tokens"] = sds((batch, cfg.num_codebooks, seq), _tok_dtype())
+        specs["labels"] = sds((batch, cfg.num_codebooks, seq), _tok_dtype())
+    elif cfg.num_image_tokens:
+        text = seq - cfg.num_image_tokens
+        specs["tokens"] = sds((batch, text), _tok_dtype())
+        specs["labels"] = sds((batch, text), _tok_dtype())
+        specs["patch_embeds"] = sds((batch, cfg.num_image_tokens, cfg.vision_dim),
+                                    jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32)
+    else:
+        specs["tokens"] = sds((batch, seq), _tok_dtype())
+        specs["labels"] = sds((batch, seq), _tok_dtype())
+    if cfg.cross_attn:
+        specs["cond"] = sds((batch, cfg.cond_len, cfg.cond_dim),
+                            jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, batch: int, seq: int):
+    specs = train_batch_specs(cfg, batch, seq)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, batch: int):
+    sds = jax.ShapeDtypeStruct
+    specs = {}
+    if cfg.num_codebooks:
+        specs["token"] = sds((batch, cfg.num_codebooks, 1), _tok_dtype())
+    else:
+        specs["token"] = sds((batch, 1), _tok_dtype())
+    if cfg.cross_attn:
+        specs["cond"] = sds((batch, cfg.cond_len, cfg.cond_dim),
+                            jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32)
+    return specs
+
+
+def specs_for_cell(cfg: ModelConfig, cell: ShapeCell):
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell.global_batch, cell.seq_len)
+    if cell.kind == "prefill":
+        return prefill_specs(cfg, cell.global_batch, cell.seq_len)
+    return decode_specs(cfg, cell.global_batch)
+
+
+def sample_from_specs(specs, cfg: ModelConfig, seed: int = 0):
+    """Concrete random arrays matching a spec tree."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, size=s.shape),
+                                 s.dtype)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape).astype(np.float32),
+                                 s.dtype)
+    return out

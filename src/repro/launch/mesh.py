@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches JAX
+device state (the dry-run sets XLA_FLAGS before any JAX initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HardwareSpec", "TPU_V5E"]
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target chip."""
+    name: str
+    peak_flops_bf16: float      # per chip, FLOP/s
+    hbm_bw: float               # bytes/s
+    ici_bw: float               # bytes/s per link
+    hbm_bytes: float
+
+
+TPU_V5E = HardwareSpec(name="tpu_v5e", peak_flops_bf16=197e12,
+                       hbm_bw=819e9, ici_bw=50e9, hbm_bytes=16e9)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic re-mesh)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,77 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --steps 100 --batch 8 --seq 128 [--smoke] [--mesh 4x2]
+
+With ``--mesh`` the train step runs jit-sharded on a device mesh using the
+production sharding rules (on real hardware invoke once per host under
+jax.distributed; on CPU set XLA_FLAGS=--xla_force_host_platform_device_count).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_mesh
+from repro.optim.adamw import adamw, cosine_schedule
+from repro.sharding import rules
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 => (data, model)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default: /tmp/repro_launch_train/<arch> (per-arch "
+                         "so restores never cross architectures)")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--data-path", default=None,
+                    help="flat uint16 token file (default: synthetic)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.ckpt_dir is None:
+        args.ckpt_dir = f"/tmp/repro_launch_train/{cfg.name}"
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    mesh = None
+    shardings = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model")[: len(shape)] if len(shape) <= 2 else \
+            ("pod", "data", "model")
+        mesh = make_mesh(shape, names)
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=0, path=args.data_path,
+                      num_codebooks=cfg.num_codebooks)
+    opt = adamw(lr=cosine_schedule(args.lr, warmup=min(20, args.steps // 5 + 1),
+                                   total=args.steps))
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
+                         checkpoint_dir=args.ckpt_dir, log_every=10)
+    if mesh is not None:
+        with rules.activate(mesh):
+            tr = Trainer(cfg, dcfg, tcfg, optimizer=opt)
+            tr.run()
+    else:
+        tr = Trainer(cfg, dcfg, tcfg, optimizer=opt)
+        tr.run()
+    for m in tr.metrics_log:
+        print(f"step={m['step']} loss={m['loss']:.4f} "
+              f"gnorm={m['grad_norm']:.3f} {m['sec_per_step']:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

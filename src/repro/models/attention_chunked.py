@@ -1,0 +1,252 @@
+"""Memory-bounded attention in pure JAX: flash-style double blocking.
+
+Three paths (DESIGN.md §6, EXPERIMENTS.md §Perf iter 3):
+
+  * decode (Sq == 1): single dense block against the (possibly ring) cache.
+  * sliding window (train/prefill): *banded-slab* attention — each query
+    chunk attends one statically-sized (window + chunk) KV slab, the exact
+    blocked-banded iteration of the stencil kernel (zero masked-flop waste
+    beyond rounding).
+  * global causal (train/prefill): ``lax.map`` over query chunks with an
+    online-softmax ``lax.scan`` over KV blocks — score tiles live only
+    inside the fused loop body, so HBM traffic is O(K + V + acc) instead of
+    O(passes x S^2) (was the dominant roofline term on every train cell).
+
+Backward: the q-chunk body is ``jax.checkpoint``-ed; residuals across
+chunks are just the outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["chunked_attention"]
+
+NEG = -1e30
+
+
+def chunked_attention(q, k, v, *, q_positions, k_positions, causal=True,
+                      window: Optional[int] = None, softcap: Optional[float] = None,
+                      kv_valid_len=None, kv_mask=None, q_chunk: int = 128,
+                      kv_block: int = 128, kv_scan: bool = False):
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KVH, Dh). Returns (B, Sq, H, Dh).
+
+    ``q_positions``/``k_positions``: absolute positions, (Sq,)/(Skv,).
+    ``kv_mask``: optional (Skv,) validity mask (ring caches, decode only).
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(dh)
+
+    if sq <= q_chunk:
+        return _attn_block(q, k, v, q_positions, k_positions, causal, window,
+                           softcap, kv_valid_len, kv_mask, group, scale)
+
+    assert kv_valid_len is None and kv_mask is None, \
+        "cache masks are decode-only; train/prefill pass fresh K/V"
+
+    pad = (-sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad),
+                              constant_values=q_positions[-1])
+    nq = q.shape[1] // q_chunk
+    qs = q.reshape(b, nq, q_chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    qpos = q_positions.reshape(nq, q_chunk)
+
+    if window is not None and causal and window < skv:
+        out = _banded_window(qs, qpos, k, v, k_positions, window, softcap,
+                             group, scale, q_chunk)
+    elif kv_scan:
+        # online-softmax KV-block scan: measured WORSE in pure-JAX HLO
+        # (EXPERIMENTS.md §Perf iter 3B) but kept selectable — it is the
+        # shape a fused TPU kernel takes (kernels/flash_attention.py)
+        out = _flash(qs, qpos, k, v, k_positions, causal, window, softcap,
+                     group, scale, kv_block)
+    else:
+        out = _dense_chunks(qs, qpos, k, v, k_positions, causal, window,
+                            softcap, group, scale)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, h, dh)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# dense q-chunk blocks (global causal train/prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_chunks(qs, qpos, k, v, k_pos, causal, window, softcap, group,
+                  scale):
+    """One (Lq x Skv) score tile per q chunk.
+
+    Measured (EXPERIMENTS.md §Perf iter 3): this beats an online-softmax
+    KV-block scan in pure-JAX HLO — the scan carry (acc/m/l) is re-written
+    to HBM every KV step, tripling traffic; the dense tile pays the
+    irreducible ~3 softmax passes and nothing else.  KV heads are repeated
+    to H up front so TP sharding of heads survives the GQA grouping
+    (repeat bytes are O(q), score tiles are O(S) bigger).  Probs are cast
+    to bf16 for the PV matmul (halves the second-pass bytes, rtol<2e-3).
+    """
+    b, skv, kvh, dh = k.shape
+    # Repeating KV to H buys clean head-TP sharding of the score tiles, but
+    # costs group-x KV reads per q chunk.  Measured (§Perf iter 3b): a win
+    # only when the repeat actually fixes sharding (H divides TP, KVH does
+    # not) and the read amplification is small (group <= 4): gemma3 yes
+    # (group 2), yi/tinyllama/llava no (group 7-8 regressed 0.8x).
+    from repro.sharding.rules import axis_size
+    tp = max(axis_size("tp"), 1)
+    h_total = kvh * group
+    if group > 1 and group <= 4 and h_total % tp == 0 and kvh % tp != 0:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+        group = 1
+
+    @jax.checkpoint
+    def one(args):
+        qc, qp = args
+        lq = qc.shape[1]
+        if group == 1:
+            s = jnp.einsum("bqhd,bthd->bhqt", qc.astype(jnp.float32),
+                           k.astype(jnp.float32)) * scale
+        else:
+            qg = qc.reshape(b, lq, kvh, group, dh)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                           k.astype(jnp.float32)) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        msk = jnp.ones((lq, skv), bool)
+        if causal:
+            msk &= k_pos[None, :] <= qp[:, None]
+        if window is not None:
+            msk &= k_pos[None, :] > qp[:, None] - window
+        s = jnp.where(msk[(None,) * (s.ndim - 2)], s, NEG)
+        # probs follow the compute dtype: bf16 in production configs
+        # (halves the softmax-output + PV-read bytes), f32 in smoke tests
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        if group == 1:
+            out = jnp.einsum("bhqt,bthd->bqhd", p, v)
+        else:
+            out = jnp.einsum("bkgqt,btkd->bqkgd", p, v).reshape(
+                b, lq, kvh * group, dh)
+        return out.astype(qc.dtype)
+
+    return lax.map(one, (qs, qpos))
+
+
+# ---------------------------------------------------------------------------
+# banded-slab window attention (stencil-blocked)
+# ---------------------------------------------------------------------------
+
+def _banded_window(qs, qpos, k, v, k_pos, window, softcap, group, scale,
+                   q_chunk):
+    b, skv = k.shape[0], k.shape[1]
+    # slab length: window + chunk, rounded to the chunk grid
+    slab = int(np.ceil((window + q_chunk) / q_chunk)) * q_chunk
+    kp = jnp.pad(k, ((0, 0), (slab, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (slab, 0), (0, 0), (0, 0)))
+    kpp = jnp.pad(k_pos, (slab, 0), constant_values=-(10 ** 9))
+
+    @jax.checkpoint
+    def one(args):
+        qc, qp, start = args
+        # slab covering positions [chunk_end - slab + 1, chunk_end]
+        ks = lax.dynamic_slice_in_dim(kp, start, slab, axis=1)
+        vs = lax.dynamic_slice_in_dim(vp, start, slab, axis=1)
+        kps = lax.dynamic_slice_in_dim(kpp, start, slab, axis=0)
+        return _attn_block(qc, ks, vs, qp, kps, True, window, softcap,
+                           None, None, group, scale)
+
+    nq = qs.shape[0]
+    starts = jnp.arange(nq) * q_chunk + q_chunk  # padded offset: end+1
+    return lax.map(one, (qs, qpos, starts))
+
+
+# ---------------------------------------------------------------------------
+# flash-style online softmax over KV blocks
+# ---------------------------------------------------------------------------
+
+def _flash(qs, qpos, k, v, k_pos, causal, window, softcap, group, scale,
+           kv_block):
+    b, skv, kvh, dh = k.shape
+    pad = (-skv) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=10 ** 9)
+    nk = k.shape[1] // kv_block
+    kb = k.reshape(b, nk, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(nk, kv_block)
+    lq = qs.shape[2]
+    h = qs.shape[3]
+
+    @jax.checkpoint
+    def one(args):
+        qc, qp = args                                  # (B, Lq, H, Dh), (Lq,)
+        qg = qc.reshape(b, lq, kvh, group, dh).astype(jnp.float32)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kblk, vblk, kp = blk
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qg,
+                           kblk.astype(jnp.float32)) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            msk = jnp.ones((lq, kv_block), bool)
+            if causal:
+                msk &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                msk &= kp[None, :] > qp[:, None] - window
+            s = jnp.where(msk[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kvh, group, lq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, group, lq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, group, lq, dh), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, KVH, G, Lq, Dh) -> (B, Lq, H, Dh)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, lq, kvh * group, dh)
+        return out.astype(qc.dtype)
+
+    return lax.map(one, (qs, qpos))
+
+
+# ---------------------------------------------------------------------------
+# dense single block (decode + window slabs)
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, q_pos, k_pos, causal, window, softcap, kv_valid_len,
+                kv_mask, group, scale):
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, group, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    m = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_valid_len is not None:
+        m &= (jnp.arange(k.shape[1]) < kv_valid_len)[None, :]
+    if kv_mask is not None:
+        m &= kv_mask[None, :]
+    scores = jnp.where(m[None, None, None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, dh)

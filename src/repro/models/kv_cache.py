@@ -1,0 +1,90 @@
+"""KV caches: full-length and ring (sliding-window) variants.
+
+Ring caches hold only ``window`` slots — absolute position ``p`` lives at
+slot ``p % window`` — so a 512k-context decode with 1k-window local layers
+costs O(window) memory per layer, which is what makes gemma3's
+``long_500k`` cell fit (DESIGN.md §4).  Keys are RoPE-rotated at write time,
+so overwrites stay consistent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["FullKVCache", "RingKVCache", "init_kv_cache", "prefill_write",
+           "decode_write", "cache_view"]
+
+
+class FullKVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, KVH, Dh)
+    v: jnp.ndarray
+    length: jnp.ndarray   # () int32
+
+
+class RingKVCache(NamedTuple):
+    k: jnp.ndarray        # (B, W, KVH, Dh)
+    v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def init_kv_cache(batch: int, max_len: int, kvh: int, dh: int,
+                  window: Optional[int] = None, dtype=jnp.bfloat16):
+    if window is not None and window < max_len:
+        z = jnp.zeros((batch, window, kvh, dh), dtype)
+        return RingKVCache(k=z, v=z, length=jnp.zeros((), jnp.int32))
+    z = jnp.zeros((batch, max_len, kvh, dh), dtype)
+    return FullKVCache(k=z, v=z, length=jnp.zeros((), jnp.int32))
+
+
+def prefill_write(cache, k, v):
+    """Write a full prefix (positions 0..S-1). k/v: (B, S, KVH, Dh)."""
+    s = k.shape[1]
+    if isinstance(cache, RingKVCache):
+        w = cache.k.shape[1]
+        if s >= w:
+            k_last, v_last = k[:, s - w:], v[:, s - w:]
+            slots = (jnp.arange(s - w, s)) % w
+        else:
+            k_last, v_last = k, v
+            slots = jnp.arange(s)
+        new_k = cache.k.at[:, slots].set(k_last.astype(cache.k.dtype))
+        new_v = cache.v.at[:, slots].set(v_last.astype(cache.v.dtype))
+        return RingKVCache(k=new_k, v=new_v, length=jnp.asarray(s, jnp.int32))
+    new_k = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+    return FullKVCache(k=new_k, v=new_v, length=jnp.asarray(s, jnp.int32))
+
+
+def decode_write(cache, k, v):
+    """Append one token. k/v: (B, 1, KVH, Dh)."""
+    if isinstance(cache, RingKVCache):
+        w = cache.k.shape[1]
+        slot = cache.length % w
+        new_k = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+        new_v = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+        return RingKVCache(k=new_k, v=new_v, length=cache.length + 1)
+    new_k = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+    return FullKVCache(k=new_k, v=new_v, length=cache.length + 1)
+
+
+def cache_view(cache):
+    """(k, v, k_positions, kv_mask) for attention over the cache contents.
+
+    Positions are absolute; invalid (unwritten) slots masked out.
+    """
+    if isinstance(cache, RingKVCache):
+        w = cache.k.shape[1]
+        j = jnp.arange(w)
+        last = cache.length - 1
+        pos = last - ((last - j) % w)          # latest abs position in slot j
+        mask = (pos >= 0) & (j < jnp.maximum(cache.length, 0)) | (cache.length >= w)
+        mask = jnp.where(cache.length > 0, (pos >= 0) & (pos < cache.length), False)
+        return cache.k, cache.v, pos, mask
+    s = cache.k.shape[1]
+    pos = jnp.arange(s)
+    mask = pos < cache.length
+    return cache.k, cache.v, pos, mask

@@ -1,0 +1,179 @@
+"""Shared neural building blocks (pure-JAX pytree modules).
+
+Conventions: parameters are nested dicts of jnp arrays; every block exposes
+``init_<block>(key, ...) -> params`` and ``<block>(params, x, ...) -> y``.
+Compute runs in ``cfg.compute_dtype`` with fp32 accumulation at reductions;
+parameters stay in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.rules import shard
+
+__all__ = [
+    "dense_init", "dense", "rms_norm_init", "rms_norm", "rope",
+    "attention", "init_attention", "mlp_init", "mlp",
+    "embed_init", "KVCache",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def dense(w, x):
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)  # gemma-style (1 + w) scale
+
+
+def rms_norm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA/MQA, causal, sliding window, softcap, optional cross-attn)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, cross: bool = False, dtype=jnp.float32):
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    kv_in = cfg.cond_dim if cross and cfg.cond_dim else d
+    p = {
+        "wq": dense_init(kq, d, h * dh, dtype),
+        "wk": dense_init(kk, kv_in, kvh * dh, dtype),
+        "wv": dense_init(kv, kv_in, kvh * dh, dtype),
+        "wo": dense_init(ko, h * dh, d, dtype, scale=1.0 / np.sqrt(h * dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(dh, dtype)
+        p["k_norm"] = rms_norm_init(dh, dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # (B, S_max, KVH, Dh)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32 — filled prefix
+
+
+def _mask(q_pos, k_pos, window: Optional[int]):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def attention(p, x, cfg, *, positions=None, cache: KVCache | None = None,
+              window: Optional[int] = None, kv_input=None, causal=True):
+    """Multi-head attention with GQA and optional KV cache / cross-attn.
+
+    x: (B, S, D).  With ``cache``, S is the new-token count (decode: 1) and
+    K/V are appended at ``cache.length``.  ``kv_input`` switches to
+    cross-attention (no cache, no causal mask).
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = dense(p["wq"], x).reshape(b, s, h, dh)
+    src = kv_input if kv_input is not None else x
+    k = dense(p["wk"], src).reshape(b, src.shape[1], kvh, dh)
+    v = dense(p["wv"], src).reshape(b, src.shape[1], kvh, dh)
+
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+
+    if kv_input is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        k = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        v = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        new_cache = KVCache(k=k, v=v, length=cache.length + s)
+        k_pos = jnp.arange(k.shape[1])
+        valid = k_pos < (cache.length + s)
+    else:
+        k_pos = jnp.arange(k.shape[1])
+        valid = None
+
+    # GQA: fold head groups; scores in fp32.
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(dh)
+    if cfg.attn_softcap:
+        c = cfg.attn_softcap
+        scores = jnp.tanh(scores / c) * c
+
+    if kv_input is None and causal:
+        q_pos = positions[0] if positions.ndim == 2 else positions
+        m = _mask(q_pos, k_pos, window)
+        if valid is not None:
+            m &= valid[None, :]
+        scores = jnp.where(m[None, None, None, :, :], scores, -1e30)
+    elif valid is not None:
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(x.dtype))
+    out = out.reshape(b, s, h * dh)
+    return dense(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d, d_ff, dtype),
+        "wi_up": dense_init(k2, d, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    g = shard(dense(p["wi_gate"], x), "dp", None, "tp")
+    u = shard(dense(p["wi_up"], x), "dp", None, "tp")
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return dense(p["wo"], a * u)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,191 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay.
+
+Training/prefill uses a chunkwise-parallel form (scan over chunks; within a
+chunk the decay-weighted attention matrix is built in log-space with all
+exponent arguments <= 0, so it is overflow-safe); decode is the O(1)
+recurrence on the (K x V) state.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init
+
+__all__ = ["init_rwkv_layer", "rwkv_time_mix", "rwkv_channel_mix",
+           "RWKVState", "init_rwkv_state", "rwkv_time_mix_step"]
+
+CHUNK = 16
+LORA = 32
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # (B, H, C, V) wkv state
+    x_tm: jnp.ndarray     # (B, D) previous token (time mix shift)
+    x_cm: jnp.ndarray     # (B, D) previous token (channel mix shift)
+
+
+def init_rwkv_state(batch: int, cfg, dtype=jnp.float32) -> RWKVState:
+    h = cfg.num_heads
+    c = cfg.head_dim
+    return RWKVState(
+        s=jnp.zeros((batch, h, c, c), jnp.float32),
+        x_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        x_cm=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def init_rwkv_layer(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    keys = jax.random.split(key, 16)
+    h, c = cfg.num_heads, cfg.head_dim
+    p = {
+        "mu_x": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "mu_rwkvg": (jnp.ones((5, d)) * 0.5).astype(dtype),
+        "lora_a": dense_init(keys[0], d, LORA * 5, dtype, scale=0.01),
+        "lora_b": (jax.random.normal(keys[1], (5, LORA, d)) * 0.01).astype(dtype),
+        "w_base": (jnp.zeros((d,)) - 4.0).astype(dtype),
+        "w_lora_a": dense_init(keys[2], d, LORA, dtype, scale=0.01),
+        "w_lora_b": dense_init(keys[3], LORA, d, dtype, scale=0.01),
+        "u": (jax.random.normal(keys[4], (h, c)) * 0.1).astype(dtype),
+        "wr": dense_init(keys[5], d, h * c, dtype),
+        "wk": dense_init(keys[6], d, h * c, dtype),
+        "wv": dense_init(keys[7], d, h * c, dtype),
+        "wg": dense_init(keys[8], d, h * c, dtype),
+        "wo": dense_init(keys[9], h * c, d, dtype),
+        "ln_out": rms_norm_init(h * c, dtype),
+        # channel mix
+        "cm_mu_k": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "cm_mu_r": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "cm_wk": dense_init(keys[10], d, cfg.d_ff, dtype),
+        "cm_wv": dense_init(keys[11], cfg.d_ff, d, dtype),
+        "cm_wr": dense_init(keys[12], d, d, dtype),
+    }
+    return p
+
+
+def _ddlerp(p, x, x_shift):
+    """Data-dependent token-shift interpolation (5 heads: r,w,k,v,g)."""
+    xx = x_shift - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(dense(p["lora_a"], xxx))                       # (..., 5*LORA)
+    lo = lo.reshape(lo.shape[:-1] + (5, LORA))
+    mods = jnp.einsum("...nl,nld->...nd", lo, p["lora_b"].astype(x.dtype))
+    mu = p["mu_rwkvg"].astype(x.dtype)                           # (5, D)
+    mixed = x[..., None, :] + xx[..., None, :] * (mu + mods)     # (..., 5, D)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _rkvwg(p, x, x_shift, cfg):
+    b = x.shape[0]
+    h, c = cfg.num_heads, cfg.head_dim
+    xr, xw, xk, xv, xg = _ddlerp(p, x, x_shift)
+    r = dense(p["wr"], xr).reshape(b, -1, h, c)
+    k = dense(p["wk"], xk).reshape(b, -1, h, c)
+    v = dense(p["wv"], xv).reshape(b, -1, h, c)
+    g = jax.nn.silu(dense(p["wg"], xg))
+    # data-dependent decay, log-space, clamped for the chunked form
+    w_in = p["w_base"].astype(x.dtype) + dense(
+        p["w_lora_b"], jnp.tanh(dense(p["w_lora_a"], xw)))
+    logw = -jnp.exp(jnp.clip(w_in.astype(jnp.float32), -10.0, 3.0))  # < 0
+    logw = logw.reshape(b, -1, h, c)
+    return r, k, v, g, logw
+
+
+def rwkv_time_mix(p, x, cfg, state: RWKVState | None = None):
+    """Chunked-parallel time mixing. x: (B, T, D) with T % CHUNK == 0
+    (callers pad).  Returns (y, final_state_s)."""
+    b, t, d = x.shape
+    h, c = cfg.num_heads, cfg.head_dim
+    pad = (-t) % CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    tt = x.shape[1]
+
+    prev = state.x_tm[:, None, :] if state is not None else jnp.zeros_like(x[:, :1])
+    x_shift = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rkvwg(p, x, x_shift, cfg)
+    if pad:
+        # padded steps must neither contribute (k, v = 0) nor decay (logw = 0)
+        valid = (jnp.arange(tt) < t)[None, :, None, None]
+        k = jnp.where(valid, k, 0.0)
+        v = jnp.where(valid, v, 0.0)
+        logw = jnp.where(valid, logw, 0.0)
+    u = p["u"].astype(jnp.float32)
+
+    nchunk = tt // CHUNK
+    def to_chunks(a):
+        return a.reshape(b, nchunk, CHUNK, h, -1).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, lwc = map(to_chunks, (r.astype(jnp.float32), k.astype(jnp.float32),
+                                      v.astype(jnp.float32), logw))
+
+    s0 = state.s if state is not None else jnp.zeros((b, h, c, c), jnp.float32)
+
+    def chunk_step(s, inp):
+        rr, kk, vv, lw = inp                       # (B, H, L, C/V)
+        lp = jnp.cumsum(lw, axis=2)                # inclusive logs, <= 0
+        lp_prev = lp - lw                          # exp(lp[t-1])
+        q_t = rr * jnp.exp(lp_prev)
+        y_inter = jnp.einsum("bhlc,bhcv->bhlv", q_t, s)
+        # intra-chunk decay matrix: exp(lp_prev[t] - lp[tau]) masked tau < t
+        diff = lp_prev[:, :, :, None, :] - lp[:, :, None, :, :]   # (B,H,L,L,C)
+        mask = (jnp.arange(CHUNK)[:, None] > jnp.arange(CHUNK)[None, :])
+        dmat = jnp.exp(jnp.minimum(diff, 0.0)) * mask[None, None, :, :, None]
+        a = jnp.einsum("bhlc,bhmc,bhlmc->bhlm", rr, kk, dmat)
+        # diagonal (current token, bonus u)
+        diag = jnp.einsum("bhlc,hc->bhl", rr * kk, u)
+        a = a + diag[..., None] * jnp.eye(CHUNK)[None, None]
+        y_intra = jnp.einsum("bhlm,bhmv->bhlv", a, vv)
+        # state to next chunk
+        decay_end = jnp.exp(lp[:, :, -1:, :])                      # (B,H,1,C)
+        k_scaled = kk * jnp.exp(lp[:, :, -1:, :] - lp)             # <= 1 factors
+        s_new = s * decay_end.squeeze(2)[..., None] + jnp.einsum(
+            "bhlc,bhlv->bhcv", k_scaled, vv)
+        return s_new, y_inter + y_intra
+
+    s_final, ys = lax.scan(chunk_step, s0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, tt, h * c)
+    y = y[:, :t]
+    y = rms_norm(p["ln_out"], y.astype(x.dtype), cfg.norm_eps) * g[:, :t]
+    return dense(p["wo"], y), s_final
+
+
+def rwkv_time_mix_step(p, x, cfg, state: RWKVState):
+    """Single-token decode: exact recurrence. x: (B, D)."""
+    b, d = x.shape
+    h, c = cfg.num_heads, cfg.head_dim
+    xb = x[:, None, :]
+    r, k, v, g, logw = _rkvwg(p, xb, state.x_tm[:, None, :].astype(x.dtype), cfg)
+    r, k, v = (a.reshape(b, h, c).astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.reshape(b, h, c))
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhc,bhv->bhcv", k, v)
+    y = jnp.einsum("bhc,bhcv->bhv", r, state.s + u[None, :, :, None] * kv)
+    s_new = state.s * w[..., None] + kv
+    y = y.reshape(b, h * c).astype(x.dtype)
+    y = rms_norm(p["ln_out"], y, cfg.norm_eps) * g.reshape(b, h * c)
+    return dense(p["wo"], y), s_new
+
+
+def rwkv_channel_mix(p, x, cfg, x_prev=None):
+    """RWKV-6 channel mix (squared-ReLU FFN with token shift).
+
+    x: (B, T, D); x_prev: (B, D) carry for decode/chunk continuation.
+    Returns (y, last_x) so callers can carry the shift state.
+    """
+    prev = x_prev[:, None, :].astype(x.dtype) if x_prev is not None else jnp.zeros_like(x[:, :1])
+    x_shift = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xk = x + (x_shift - x) * p["cm_mu_k"].astype(x.dtype)
+    xr = x + (x_shift - x) * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk)))
+    y = jax.nn.sigmoid(dense(p["cm_wr"], xr)) * dense(p["cm_wv"], k)
+    return y, x[:, -1]

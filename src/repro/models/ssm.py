@@ -1,0 +1,193 @@
+"""Selective SSM (Mamba-style) branch used by the Hymba hybrid.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t        (per channel, N states)
+    y_t = C_t . h_t + D * x_t
+
+Training/prefill: scan over chunks with a rematerialized inner step scan
+(only chunk-boundary states are saved for backward).  Decode: O(1) step.
+
+The short causal conv in front is the stencil-matrixization integration
+point (DESIGN.md §5): ``conv_shared=True`` runs the shared-band MXU path
+(`kernels.banded_mix`), otherwise the depthwise degenerate path (the
+paper's single-nonzero-line case) — also via the same kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ops import banded_mix
+from repro.models.layers import dense, dense_init
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_step", "SSMState", "init_ssm_state"]
+
+CHUNK = 32
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray         # (B, DI, N)
+    conv_tail: jnp.ndarray  # (B, W-1, DI) trailing inputs for the conv
+
+
+def init_ssm_state(batch: int, cfg, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return SSMState(h=jnp.zeros((batch, di, s.state_dim), jnp.float32),
+                    conv_tail=jnp.zeros((batch, s.conv_width - 1, di), dtype))
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    n = s.state_dim
+    dt_rank = s.dt_rank or int(np.ceil(d / 16))
+    keys = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    p = {
+        "in_proj": dense_init(keys[0], d, 2 * di, dtype),
+        "conv_band": (jax.random.normal(keys[1], (s.conv_width,) + (() if s.conv_shared else (di,)))
+                      * (1.0 / s.conv_width)).astype(dtype),
+        "x_proj": dense_init(keys[2], di, dt_rank + 2 * n, dtype),
+        "dt_proj": dense_init(keys[3], dt_rank, di, dtype, scale=dt_rank ** -0.5),
+        "dt_bias": (jnp.log(jnp.exp(jnp.clip(
+            jax.random.uniform(keys[4], (di,)) * (0.1 - 1e-3) + 1e-3, 1e-4, None)) - 1.0)
+        ).astype(dtype),
+        "a_log": jnp.log(a).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(keys[5], di, d, dtype),
+    }
+    return p
+
+
+def _conv_act(p, xz, cfg, conv_tail=None):
+    """Causal short conv (+silu) via the banded-mixer kernel; returns also
+    the new tail for decode continuation."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    x, z = jnp.split(xz, 2, axis=-1)
+    if conv_tail is not None:
+        x_ext = jnp.concatenate([conv_tail.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = x
+    band = p["conv_band"]
+    if cfg.kernel_impl == "pallas":
+        # kernel path: (W,) shared -> MXU Toeplitz matmul, (W, DI) -> depthwise
+        y = banded_mix(x_ext.astype(jnp.float32), band.astype(jnp.float32))
+    else:
+        # SPMD-friendly reference (shifted adds partition cleanly; the
+        # interpret-mode Pallas grid loop defeats the GSPMD partitioner on
+        # the 512-device dry-run — see DESIGN.md §8)
+        w = band.shape[0]
+        bandf = band.astype(jnp.float32) if band.ndim == 2 else \
+            band.astype(jnp.float32)[:, None]
+        xe = x_ext.astype(jnp.float32)
+        tlen = xe.shape[1]
+        acc = None
+        for sshift in range(w):
+            shifted = jnp.pad(xe, ((0, 0), (sshift, 0), (0, 0)))[:, :tlen, :]
+            term = bandf[sshift][None, None, :] * shifted
+            acc = term if acc is None else acc + term
+        y = acc
+    y = y[:, -x.shape[1]:, :].astype(x.dtype)
+    new_tail = x_ext[:, -(s.conv_width - 1):, :] if s.conv_width > 1 else x_ext[:, :0, :]
+    return jax.nn.silu(y), z, new_tail
+
+
+def _dt_b_c(p, x, cfg):
+    s = cfg.ssm
+    n = s.state_dim
+    dt_rank = s.dt_rank or int(np.ceil(cfg.d_model / 16))
+    dbc = dense(p["x_proj"], x)
+    dt_lr, b, c = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_lr) + p["dt_bias"].astype(x.dtype))
+    return dt, b, c
+
+
+def ssm_forward(p, xin, cfg, state: SSMState | None = None):
+    """x: (B, T, D) -> (B, T, D); returns (y, new_state)."""
+    b, t, d = xin.shape
+    s = cfg.ssm
+    di = s.expand * d
+    n = s.state_dim
+
+    xz = dense(p["in_proj"], xin)
+    x, z, new_tail = _conv_act(p, xz, cfg,
+                               conv_tail=state.conv_tail if state is not None else None)
+    dt, bb, cc = _dt_b_c(p, x, cfg)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (DI, N), < 0
+
+    # Perf iter 2 (stencil-scheduling principle, DESIGN.md obs. 1/3): keep
+    # the (B, DI, N) state accumulator resident and stream only the SMALL
+    # per-step inputs (dt, dt*x: DI; B, C: N).  The decay la_t and rank-1
+    # input u_t are formed inside the step — the (B, T, DI, N) tensors are
+    # never materialized in HBM (was 16x the necessary traffic).
+    dtx = (dt * x).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    pad = (-t) % CHUNK
+    if pad:
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nchunk = tt // CHUNK
+
+    def chunked(z, width):
+        return z.reshape(b, nchunk, CHUNK, width).transpose(1, 0, 2, 3)
+
+    dtc = chunked(dtf, di)
+    dtxc = chunked(dtx, di)
+    bbc = chunked(bb.astype(jnp.float32), n)
+    ccc = chunked(cc.astype(jnp.float32), n)
+
+    h0 = state.h if state is not None else jnp.zeros((b, di, n), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        dtk, dtxk, bk, ck = inp
+
+        def step(hh, sin):
+            dt_t, dtx_t, b_t, c_t = sin
+            la_t = dt_t[..., None] * a[None]                  # (B, DI, N)
+            u_t = dtx_t[..., None] * b_t[:, None, :]
+            hh = hh * jnp.exp(la_t) + u_t
+            y_t = jnp.einsum("bdn,bn->bd", hh, c_t)
+            return hh, y_t
+
+        h, ys = lax.scan(step, h, (dtk.transpose(1, 0, 2),
+                                   dtxk.transpose(1, 0, 2),
+                                   bk.transpose(1, 0, 2),
+                                   ck.transpose(1, 0, 2)))
+        return h, ys  # ys: (L, B, DI)
+
+    h_final, ys = lax.scan(chunk_body, h0, (dtc, dtxc, bbc, ccc))
+    y = ys.transpose(2, 0, 1, 3).reshape(b, tt, di)[:, :t]
+    y = y.astype(xin.dtype) + p["d_skip"].astype(xin.dtype) * x
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, SSMState(h=h_final, conv_tail=new_tail)
+
+
+def ssm_step(p, xin, cfg, state: SSMState):
+    """Single-token decode. xin: (B, D)."""
+    b, d = xin.shape
+    s = cfg.ssm
+    xz = dense(p["in_proj"], xin[:, None, :])
+    x, z, new_tail = _conv_act(p, xz, cfg, conv_tail=state.conv_tail)
+    x, z = x[:, 0], z[:, 0]
+    dt, bb, cc = _dt_b_c(p, x, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    la = dt.astype(jnp.float32)[..., None] * a[None]
+    u = (dt * x).astype(jnp.float32)[..., None] * bb.astype(jnp.float32)[:, None, :]
+    h = state.h * jnp.exp(la) + u
+    y = jnp.einsum("bdn,bn->bd", h, cc.astype(jnp.float32)).astype(xin.dtype)
+    y = y + p["d_skip"].astype(xin.dtype) * x
+    y = y * jax.nn.silu(z)
+    return dense(p["out_proj"], y), SSMState(h=h, conv_tail=new_tail)

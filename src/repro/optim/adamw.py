@@ -1,0 +1,114 @@
+"""AdamW with global-norm clipping, schedules, and gradient accumulation.
+
+Pure-pytree implementation (optax is not installed in this container).
+Master moments in fp32 regardless of parameter dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw", "cosine_schedule", "linear_warmup",
+           "global_norm", "clip_by_global_norm", "GradAccumulator"]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return fn
+
+
+def linear_warmup(base_lr: float, warmup: int):
+    return lambda step: base_lr * jnp.minimum((step.astype(jnp.float32) + 1) / warmup, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:
+    """AdamW transform: ``opt.init(params)``, ``opt.update(grads, state, params)``."""
+
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m / (1 - self.b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([n[0] for n in new])
+        new_m = tdef.unflatten([n[1] for n in new])
+        new_v = tdef.unflatten([n[2] for n in new])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v), metrics
+
+
+class GradAccumulator:
+    """Micro-batch gradient accumulation (scan over microbatches)."""
+
+    @staticmethod
+    def accumulate(loss_fn, params, batches):
+        """batches: pytree with leading microbatch axis. Returns (mean_loss,
+        mean_grads, mean_aux)."""
+
+        def body(carry, mb):
+            acc_g, acc_l, acc_a = carry
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc_g = jax.tree.map(jnp.add, acc_g, g)
+            return (acc_g, acc_l + l, acc_a + aux), None
+
+        n = jax.tree.leaves(batches)[0].shape[0]
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, l, a), _ = jax.lax.scan(body, (zero_g, 0.0, 0.0), batches)
+        inv = 1.0 / n
+        return l * inv, jax.tree.map(lambda x: x * inv, g), a * inv

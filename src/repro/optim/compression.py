@@ -1,0 +1,76 @@
+"""Gradient compression for data-parallel sync (DESIGN.md §6).
+
+Two compressors with the standard error-feedback loop
+(``g_hat = C(g + e); e' = (g + e) - g_hat``) so compression error
+accumulates into later steps instead of being lost:
+
+  * ``bf16``  — cast-only (2x wire reduction, no state beyond none)
+  * ``int8``  — per-tensor absmax int8 (4x), error feedback required
+
+Used by the trainer's explicit-DP mode (shard_map gradient psum); in the
+pure-jit path XLA owns the all-reduce and the bf16 compressor is applied as
+a pre-reduction cast.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionState", "make_compressor"]
+
+
+class CompressionState(NamedTuple):
+    error: dict  # error-feedback residual per parameter (fp32)
+
+
+def _zeros_like_tree(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def make_compressor(kind: str):
+    """Returns (init_fn, compress_fn, decompress_fn).
+
+    compress_fn(grads, state) -> (wire_tree, new_state); the wire tree is
+    what crosses the interconnect (psum/all-reduce it), decompress_fn maps
+    it back to fp32 grads.
+    """
+    if kind == "none":
+        return (lambda g: CompressionState(error={}),
+                lambda g, s: (g, s),
+                lambda w: w)
+
+    if kind == "bf16":
+        def compress(g, s):
+            return jax.tree.map(lambda x: x.astype(jnp.bfloat16), g), s
+        return (lambda g: CompressionState(error={}),
+                compress,
+                lambda w: jax.tree.map(lambda x: x.astype(jnp.float32), w))
+
+    if kind == "int8":
+        def init(g):
+            return CompressionState(error=_zeros_like_tree(g))
+
+        def compress(g, s: CompressionState):
+            def one(x, e):
+                x = x.astype(jnp.float32) + e
+                scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+                q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+                deq = q.astype(jnp.float32) * scale
+                return (q, scale), x - deq
+
+            flat, treedef = jax.tree.flatten(g)
+            err = treedef.flatten_up_to(s.error)
+            pairs = [one(x, e) for x, e in zip(flat, err)]
+            wire = treedef.unflatten([p[0] for p in pairs])
+            new_err = treedef.unflatten([p[1] for p in pairs])
+            return wire, CompressionState(error=new_err)
+
+        def decompress(wire):
+            return jax.tree.map(lambda qs: qs[0].astype(jnp.float32) * qs[1],
+                                wire, is_leaf=lambda x: isinstance(x, tuple)
+                                and len(x) == 2 and not isinstance(x[0], tuple))
+        return init, compress, decompress
+
+    raise ValueError(f"unknown compressor {kind!r}")

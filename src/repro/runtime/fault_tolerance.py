@@ -1,0 +1,112 @@
+"""Fault-tolerance runtime: step heartbeats, straggler detection, restart
+policy, elastic re-mesh planning.
+
+Single-controller view: in a real multi-host deployment each host runs this
+monitor and publishes heartbeats; here the same objects instrument the
+trainer loop and are unit-tested with injected failures/stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Callable, Optional
+
+__all__ = ["HeartbeatMonitor", "RestartPolicy", "plan_elastic_mesh",
+           "StepTimeout"]
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class HeartbeatMonitor:
+    """EWMA step-time tracker with straggler flagging.
+
+    A step counts as a straggler when it exceeds ``threshold`` x the EWMA.
+    The trainer logs them and (configurably) aborts the step so the restart
+    policy can kick in — the moral equivalent of preemption handling.
+    """
+
+    def __init__(self, threshold: float = 3.0, ewma: float = 0.9,
+                 window: int = 50, hard_timeout_s: Optional[float] = None):
+        self.threshold = threshold
+        self.ewma_coef = ewma
+        self.hard_timeout_s = hard_timeout_s
+        self.mean: Optional[float] = None
+        self.history: deque = deque(maxlen=window)
+        self.stragglers: list[tuple[int, float, float]] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int):
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> float:
+        dt = time.monotonic() - self._t0
+        self.history.append(dt)
+        is_straggler = self.mean is not None and dt > self.threshold * self.mean
+        if is_straggler:
+            self.stragglers.append((self._step, dt, self.mean))
+        else:
+            self.mean = dt if self.mean is None else (
+                self.ewma_coef * self.mean + (1 - self.ewma_coef) * dt)
+        if self.hard_timeout_s is not None and dt > self.hard_timeout_s:
+            raise StepTimeout(f"step {self._step} took {dt:.2f}s "
+                              f"(> {self.hard_timeout_s}s)")
+        return dt
+
+    def record(self, step: int, dt: float):
+        """Offline variant for injected tests."""
+        self._step, self._t0 = step, time.monotonic() - dt
+        self.history.append(dt)
+        if self.mean is not None and dt > self.threshold * self.mean:
+            self.stragglers.append((step, dt, self.mean))
+        else:
+            self.mean = dt if self.mean is None else (
+                self.ewma_coef * self.mean + (1 - self.ewma_coef) * dt)
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    """Bounded-retry restart with exponential backoff."""
+
+    max_failures: int = 3
+    backoff_s: float = 0.1
+    backoff_factor: float = 2.0
+    failures: int = 0
+
+    def on_failure(self, err: BaseException) -> float:
+        """Record a failure; returns the backoff to sleep, raises if the
+        budget is exhausted."""
+        self.failures += 1
+        if self.failures > self.max_failures:
+            raise RuntimeError(
+                f"restart budget exhausted ({self.max_failures})") from err
+        return self.backoff_s * self.backoff_factor ** (self.failures - 1)
+
+    def on_success(self):
+        self.failures = 0
+
+
+def plan_elastic_mesh(available_devices: int, model_parallel: int,
+                      pods: int = 1) -> tuple[int, ...]:
+    """Largest (pods, data, model) mesh that fits the surviving devices.
+
+    Keeps model-parallel intact (parameter shards must stay complete) and
+    shrinks data-parallel — the standard elastic-degradation direction.
+    """
+    if available_devices < model_parallel:
+        raise ValueError("cannot keep a model replica alive: "
+                         f"{available_devices} < MP {model_parallel}")
+    per_pod = available_devices // pods
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError("no full data-parallel replica fits")
+    # keep power-of-two data-parallel for collective efficiency
+    data = 2 ** int(math.log2(data))
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)

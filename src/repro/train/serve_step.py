@@ -1,0 +1,69 @@
+"""Serving steps: prefill (build caches from a prompt) and decode (one
+token against the caches).  These are the functions the decode_32k /
+long_500k dry-run cells lower.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+__all__ = ["ServeState", "make_prefill", "make_decode_step", "greedy_generate"]
+
+
+class ServeState(NamedTuple):
+    caches: tuple
+    length: jnp.ndarray  # () int32 — tokens consumed so far
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill(params, tokens, patch_embeds=None, cond=None):
+        batch = tokens.shape[0]
+        caches = tf.init_caches(cfg, batch, max_len)
+        logits, new_caches, _ = tf.forward(
+            params, cfg, tokens, patch_embeds=patch_embeds, cond=cond,
+            caches=caches, mode="prefill", start_pos=0)
+        seq = logits.shape[1]
+        last = logits[:, -1]
+        return last, ServeState(caches=new_caches,
+                                length=jnp.asarray(seq, jnp.int32))
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state: ServeState, token, cond=None):
+        """token: (B, 1) ints — or (B, K, 1) for codebook models."""
+        logits, new_caches, _ = tf.forward(
+            params, cfg, token, cond=cond, caches=state.caches, mode="decode",
+            start_pos=state.length)
+        return logits[:, -1] if not cfg.num_codebooks else logits[:, -1], \
+            ServeState(caches=new_caches, length=state.length + 1)
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, steps: int, max_len: int,
+                    cond=None, patch_embeds=None):
+    """Greedy decoding loop (example/test driver)."""
+    prefill = make_prefill(cfg, max_len)
+    decode = make_decode_step(cfg)
+    last, state = prefill(params, prompt, patch_embeds=patch_embeds, cond=cond)
+
+    def pick(last):
+        tok = jnp.argmax(last, axis=-1)
+        if cfg.num_codebooks:
+            return tok[..., None].swapaxes(-1, -2) if tok.ndim == 2 else tok[:, :, None]
+        return tok[:, None]
+
+    def body(carry, _):
+        last, state = carry
+        tok = pick(last)
+        nxt, state = decode(params, state, tok, cond=cond)
+        out_tok = tok[:, :, 0] if cfg.num_codebooks else tok[:, 0]
+        return (nxt, state), out_tok
+
+    (_, state), toks = jax.lax.scan(body, (last, state), None, length=steps)
+    return jnp.moveaxis(toks, 0, -1), state

@@ -1,0 +1,106 @@
+"""Train-step factory: forward (hidden) -> chunked CE -> grads -> AdamW.
+
+The returned function is pure and jit-able with in/out shardings; the
+launcher attaches the production mesh, the trainer a 1-device mesh, tests
+call it raw.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWState, adamw
+from repro.train.loss import chunked_cross_entropy
+
+__all__ = ["TrainState", "make_loss_fn", "make_train_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: adamw) -> TrainState:
+    params = tf.init_params(key, cfg)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_loss_fn(cfg: ModelConfig, ce_chunk: int = 512):
+    """(params, batch) -> (loss, aux). batch: {tokens, labels[, mask,
+    patch_embeds, cond]}."""
+
+    def loss_fn(params, batch):
+        compute_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.compute_dtype]
+        hidden, _, aux = tf.forward(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            cond=batch.get("cond"),
+            mode="train", head=False)
+        head_w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        if cfg.num_codebooks:
+            # (B,S,D) x (K,D,V): fold codebooks into the chunked CE by
+            # flattening K into the batch axis per codebook head.
+            losses = []
+            for kcb in range(cfg.num_codebooks):
+                l, _ = chunked_cross_entropy(hidden, head_w[kcb], labels[:, kcb],
+                                             mask=mask, chunk=ce_chunk)
+                losses.append(l)
+            ce = sum(losses) / cfg.num_codebooks
+        else:
+            if cfg.num_image_tokens:
+                # image positions are inputs only — no next-token loss there
+                b = hidden.shape[0]
+                hidden = hidden[:, cfg.num_image_tokens:]
+            ce, _ = chunked_cross_entropy(hidden, head_w, labels, mask=mask,
+                                          chunk=ce_chunk,
+                                          transpose_head=cfg.tie_embeddings)
+        return ce + aux, aux
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: adamw, ce_chunk: int = 512,
+                    donate: bool = True, microbatches: int = 1):
+    """``microbatches > 1`` splits the batch on its leading axis and scans
+    gradient accumulation over the splits — identical math at 1/m the
+    activation memory (the §Fit lever for the largest train cells)."""
+    loss_fn = make_loss_fn(cfg, ce_chunk)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, one):
+                acc_g, acc_l, acc_a = carry
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, one)
+                return (jax.tree.map(jnp.add, acc_g, g),
+                        acc_l + l, acc_a + a), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zero, jnp.zeros(()), jnp.zeros(())), mb)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, aux = loss * inv, aux * inv
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+        new_params, new_opt, metrics = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, aux_loss=aux)
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,116 @@
+"""Fault-tolerant training loop.
+
+Wires together: sharded train_step (jit with mesh shardings), resumable
+data pipeline, async checkpoint manager, heartbeat/straggler monitor, and
+the restart policy.  ``Trainer.run`` survives injected step failures by
+restoring the latest checkpoint and replaying the deterministic data
+stream — the single-process rehearsal of the multi-host recovery story.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import CheckpointManager, restore_checkpoint
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.optim.adamw import adamw
+from repro.runtime.fault_tolerance import HeartbeatMonitor, RestartPolicy
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    seed: int = 0
+    straggler_threshold: float = 3.0
+    max_failures: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, optimizer: adamw | None = None,
+                 mesh=None, shardings=None,
+                 fault_injector: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.tcfg = tcfg
+        self.optimizer = optimizer or adamw(lr=3e-4)
+        self.mesh = mesh
+        self.pipeline = make_pipeline(data_cfg)
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      keep=tcfg.keep_checkpoints,
+                                      async_save=tcfg.async_checkpoint)
+        self.monitor = HeartbeatMonitor(threshold=tcfg.straggler_threshold)
+        self.restart = RestartPolicy(max_failures=tcfg.max_failures)
+        self.fault_injector = fault_injector
+        self.metrics_log: list[dict] = []
+
+        step_fn = make_train_step(cfg, self.optimizer)
+        if mesh is not None and shardings is not None:
+            self._step = jax.jit(step_fn, in_shardings=shardings.get("in"),
+                                 out_shardings=shardings.get("out"),
+                                 donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+
+    # -- state ---------------------------------------------------------------
+    def _fresh_state(self) -> TrainState:
+        return init_train_state(jax.random.PRNGKey(self.tcfg.seed), self.cfg,
+                                self.optimizer)
+
+    def _restore_or_init(self) -> TrainState:
+        latest = self.ckpt.latest()
+        state = self._fresh_state()
+        if latest is None:
+            return state
+        restored, extra = restore_checkpoint(self.tcfg.checkpoint_dir, latest, state)
+        return restored
+
+    # -- loop ----------------------------------------------------------------
+    def run(self) -> TrainState:
+        state = self._restore_or_init()
+        while int(state.step) < self.tcfg.total_steps:
+            step = int(state.step)
+            try:
+                self.monitor.start_step(step)
+                if self.fault_injector is not None:
+                    self.fault_injector(step)
+                batch = self.pipeline.batch_at(step)
+                new_state, metrics = self._step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = self.monitor.end_step()
+                state = new_state
+                self.restart.on_success()
+                if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                    self.metrics_log.append(
+                        {"step": step, "loss": float(metrics["loss"]),
+                         "grad_norm": float(metrics["grad_norm"]),
+                         "sec_per_step": dt})
+                if (step + 1) % self.tcfg.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, state, extra={"data_step": step + 1})
+            except Exception as err:  # noqa: BLE001 — restart path
+                backoff = self.restart.on_failure(err)
+                time.sleep(backoff)
+                # donated buffers may be invalid; rebuild from checkpoint
+                self._step = jax.jit(make_train_step(self.cfg, self.optimizer),
+                                     donate_argnums=(0,))
+                state = self._restore_or_init()
+        self.ckpt.wait()
+        self.ckpt.save(int(state.step), state,
+                       extra={"data_step": int(state.step)})
+        self.ckpt.wait()
+        return state

@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests (reduced configs): forward shapes, train
+step finiteness + improvement, serve consistency, RWKV/SSM recurrence
+equivalence, MoE invariants."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, ModelConfig, MoEConfig, SSMConfig,
+                                cells_for, get_config, get_smoke_config)
+from repro.launch.input_specs import train_batch_specs, sample_from_specs
+from repro.models import transformer as tf
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as R
+from repro.models import ssm as S
+from repro.optim.adamw import adamw
+from repro.train.serve_step import make_decode_step, make_prefill
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    opt = adamw(lr=1e-3)
+    batch = sample_from_specs(train_batch_specs(cfg, 2, 24), cfg, seed=1)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, ce_chunk=8))
+    state, m1 = step(state, batch)
+    assert np.isfinite(float(m1["loss"]))
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]) + 1.0
+    logits, _, _ = tf.forward(state.params, cfg, batch["tokens"],
+                              patch_embeds=batch.get("patch_embeds"),
+                              cond=batch.get("cond"), mode="train")
+    if cfg.num_codebooks:
+        assert logits.shape[-1] == cfg.vocab_size
+        assert logits.shape[2] == cfg.num_codebooks
+    else:
+        assert logits.shape[-1] == cfg.vocab_size
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_consistency(arch):
+    cfg = get_smoke_config(arch)
+    batch = sample_from_specs(train_batch_specs(cfg, 2, 20), cfg, seed=2)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    toks = batch["tokens"]
+    kw = {k: batch[k] for k in ("patch_embeds", "cond") if k in batch}
+    prefill = jax.jit(make_prefill(cfg, max_len=24 + (cfg.num_image_tokens or 0)))
+    decode = jax.jit(make_decode_step(cfg))
+    last_full, _ = prefill(params, toks, **kw)
+    n_pre = 12
+    pre = toks[..., :n_pre] if cfg.num_codebooks else toks[:, :n_pre]
+    rest = toks[..., n_pre:] if cfg.num_codebooks else toks[:, n_pre:]
+    last, st = prefill(params, pre, **kw)
+    for t in range(rest.shape[-1]):
+        tok = rest[..., t:t + 1] if cfg.num_codebooks else rest[:, t:t + 1]
+        last, st = decode(params, st, tok, cond=batch.get("cond"))
+    np.testing.assert_allclose(np.asarray(last), np.asarray(last_full),
+                               atol=5e-5)
+
+
+def test_full_configs_param_counts():
+    """Full configs carry the published scale (sanity order-of-magnitude)."""
+    expect = {"yi_6b": (5e9, 8e9), "gemma_2b": (2e9, 3.5e9),
+              "tinyllama_1_1b": (0.9e9, 1.4e9), "gemma3_12b": (9e9, 14e9),
+              "musicgen_large": (1.5e9, 4.5e9), "rwkv6_1_6b": (1.2e9, 2.2e9),
+              "llava_next_34b": (30e9, 38e9), "qwen3_moe_30b_a3b": (28e9, 33e9),
+              "granite_moe_3b_a800m": (2.5e9, 4e9), "hymba_1_5b": (1e9, 2e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_cells_for_long_context_rule():
+    assert "long_500k" in cells_for("rwkv6_1_6b")
+    assert "long_500k" in cells_for("hymba_1_5b")
+    assert "long_500k" in cells_for("gemma3_12b")
+    assert "long_500k" not in cells_for("yi_6b")
+    assert "long_500k" not in cells_for("qwen3_moe_30b_a3b")
+    total = sum(len(cells_for(a)) for a in ARCH_IDS)
+    assert total == 33  # 40 assignment cells - 7 documented skips
+
+
+def test_rwkv_chunked_equals_sequential():
+    cfg = get_smoke_config("rwkv6_1_6b")
+    p = R.init_rwkv_layer(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 37, cfg.d_model))
+    y_chunk, s_chunk = R.rwkv_time_mix(p, x, cfg)
+    st = R.init_rwkv_state(2, cfg)
+    ys = []
+    for t in range(37):
+        y, s_new = R.rwkv_time_mix_step(p, x[:, t], cfg, st)
+        st = R.RWKVState(s=s_new, x_tm=x[:, t], x_cm=st.x_cm)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(st.s), atol=1e-4)
+
+
+def test_ssm_chunked_equals_sequential():
+    cfg = get_smoke_config("hymba_1_5b")
+    p = S.init_ssm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 41, cfg.d_model))
+    y_par, st_par = S.ssm_forward(p, x, cfg)
+    st = S.init_ssm_state(2, cfg)
+    ys = []
+    for t in range(41):
+        y, st = S.ssm_step(p, x[:, t], cfg, st)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_par),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_par.h), np.asarray(st.h), atol=1e-4)
+
+
+def test_moe_dropless_matches_dense_reference():
+    mcfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), 8, mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 8))
+    out = moe_mod.moe_ffn(p, x, mcfg, dropless=True)
+    # dense reference: run every expert on every token, combine by gates
+    xt = x.reshape(-1, 8)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, experts = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+    y_ref = jnp.zeros_like(xt)
+    for e in range(4):
+        g = jax.nn.silu(xt @ p["wi_gate"][e]) * (xt @ p["wi_up"][e])
+        ye = g @ p["wo"][e]
+        w = jnp.where(experts == e, gates, 0.0).sum(-1)
+        y_ref = y_ref + w[:, None] * ye
+    np.testing.assert_allclose(np.asarray(out.y.reshape(-1, 8)),
+                               np.asarray(y_ref), atol=1e-4)
+    assert float(out.aux_loss) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    mcfg = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                     capacity_factor=0.5)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), 4, mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 4))
+    out_cap = moe_mod.moe_ffn(p, x, mcfg)
+    out_free = moe_mod.moe_ffn(p, x, mcfg, dropless=True)
+    # capacity 0.5 must zero some tokens vs dropless
+    diff = np.abs(np.asarray(out_cap.y - out_free.y)).max()
+    assert diff > 1e-6
+
+
+def test_sliding_window_masks_long_range():
+    cfg = get_smoke_config("gemma3_12b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 30), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 1) % cfg.vocab_size)
+    l1, _, _ = tf.forward(params, cfg, t1, mode="train")
+    l2, _, _ = tf.forward(params, cfg, t2, mode="train")
+    # with window 8 and one global layer per 6, late positions DO see pos 0
+    # through the global layer; but a pure-local variant must not:
+    import dataclasses
+    cfg_local = dataclasses.replace(cfg, local_global_period=0,
+                                    num_layers=2, sliding_window=8)
+    params_l = tf.init_params(jax.random.PRNGKey(0), cfg_local)
+    l1l, _, _ = tf.forward(params_l, cfg_local, t1, mode="train")
+    l2l, _, _ = tf.forward(params_l, cfg_local, t2, mode="train")
+    np.testing.assert_allclose(np.asarray(l1l[:, -1]), np.asarray(l2l[:, -1]),
+                               atol=1e-5)  # pos 0 outside every window
+    assert np.abs(np.asarray(l1[:, 8:12]) - np.asarray(l2[:, 8:12])).max() > 0 \
+        or np.abs(np.asarray(l1[:, -1]) - np.asarray(l2[:, -1])).max() > 1e-7

@@ -1,0 +1,150 @@
+"""Core stencil-matrixization properties: gather/scatter duality, cover
+validity and minimality, matrixized == oracle across the paper suite and
+randomized specs."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import stencil_spec as ss
+from repro.core import coefficient_lines as cl
+from repro.core import matrixization as mx
+from repro.core.engine import StencilEngine, choose_cover, legal_covers
+from repro.kernels.ref import stencil_ref, stencil_ref_conv
+
+from prop import prop_cases
+
+
+def _covers_for(spec):
+    opts = ["parallel"]
+    if spec.shape == "star":
+        opts.append("orthogonal")
+        if spec.ndim == 3:
+            opts.append("hybrid")
+    if spec.shape == "diagonal":
+        opts.append("diagonal")
+    if spec.ndim == 2:
+        opts.append("minimal")
+    return opts
+
+
+def test_scatter_is_full_reversal():
+    spec = ss.box(2, 1, seed=1)
+    cg = spec.gather_coeffs
+    cs = spec.scatter_coeffs
+    assert np.allclose(cs, cg[::-1, ::-1])
+    # Eq. 5: Cs = J Cg J
+    j = np.eye(3)[::-1]
+    assert np.allclose(cs, j @ cg @ j)
+
+
+def test_every_cover_reproduces_cs():
+    for name, spec in ss.PAPER_SUITE().items():
+        for opt in _covers_for(spec):
+            cover = cl.make_cover(spec, opt)  # .validate() inside
+            assert len(cover.lines) >= 1, (name, opt)
+
+
+@pytest.mark.parametrize("name,spec", list(ss.PAPER_SUITE().items()))
+def test_matrixized_matches_oracle(name, spec):
+    rng = np.random.default_rng(7)
+    shape = (26,) * spec.ndim
+    x = jnp.asarray(rng.normal(size=(2,) + shape), jnp.float32)
+    ref = stencil_ref(x, spec)
+    ref2 = stencil_ref_conv(x, spec)
+    np.testing.assert_allclose(ref, ref2, atol=1e-4)
+    for opt in _covers_for(spec):
+        out = mx.matrixized_apply(x, spec, cl.make_cover(spec, opt))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                                   err_msg=f"{name}/{opt}")
+
+
+@prop_cases(n=25, seed=3)
+def test_random_spec_matrixization(draw):
+    ndim = draw.choice([2, 3])
+    r = draw.int(1, 2 if ndim == 3 else 3)
+    ext = 2 * r + 1
+    coeffs = draw.normal((ext,) * ndim, scale=0.5)
+    # random sparsity
+    mask = draw.floats((ext,) * ndim) > 0.3
+    coeffs = coeffs * mask
+    if not np.count_nonzero(coeffs):
+        coeffs.flat[0] = 1.0
+    spec = ss.from_gather_coeffs(coeffs)
+    n = draw.int(2 * r + 2, 14)
+    x = jnp.asarray(draw.normal((n + 2 * r,) * ndim), jnp.float32)
+    ref = stencil_ref(x, spec)
+    out = mx.matrixized_apply(x, spec, cl.make_cover(spec, "parallel"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    if ndim == 2:
+        sep = mx.separable_apply(x, spec)
+        np.testing.assert_allclose(np.asarray(sep), np.asarray(ref), atol=1e-4)
+        mc = mx.matrixized_apply(x, spec, cl.make_cover(spec, "minimal"))
+        np.testing.assert_allclose(np.asarray(mc), np.asarray(ref), atol=1e-4)
+
+
+@prop_cases(n=15, seed=5)
+def test_minimal_cover_is_minimum(draw):
+    """König cover size == brute-force minimum axis-parallel cover."""
+    r = draw.int(1, 2)
+    ext = 2 * r + 1
+    mask = draw.floats((ext, ext)) > 0.5
+    if not mask.any():
+        mask[r, r] = True
+    coeffs = draw.normal((ext, ext)) * mask
+    coeffs[mask & (coeffs == 0)] = 0.5
+    spec = ss.from_gather_coeffs(coeffs)
+    cover = cl.minimal_cover_2d(spec)
+    cover.validate()
+    # brute force: choose subsets of rows/cols covering all nonzeros
+    nz = np.argwhere(spec.scatter_coeffs != 0)
+    best = None
+    import itertools
+    for k in range(0, 2 * ext + 1):
+        if best is not None:
+            break
+        for rows in itertools.combinations(range(2 * ext), k):
+            rset = {x for x in rows if x < ext}
+            cset = {x - ext for x in rows if x >= ext}
+            if all((i in rset) or (j in cset) for i, j in nz):
+                best = k
+                break
+    assert len(cover.lines) == best, (len(cover.lines), best, mask.astype(int))
+
+
+def test_linearity_and_translation_invariance():
+    spec = ss.star(2, 2, seed=9)
+    cover = cl.make_cover(spec, "orthogonal")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(20, 20)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(20, 20)), jnp.float32)
+    f = lambda x: mx.matrixized_apply(x, spec, cover)
+    np.testing.assert_allclose(np.asarray(f(2 * a + 3 * b)),
+                               np.asarray(2 * f(a) + 3 * f(b)), atol=1e-4)
+    # translation: shifting input shifts valid-mode output
+    sh = np.asarray(f(a))
+    sh2 = np.asarray(f(jnp.roll(a, 1, axis=0)))
+    np.testing.assert_allclose(sh2[2:, :], sh[1:-1, :], atol=1e-4)
+
+
+def test_choose_cover_prefers_orthogonal_for_high_order_star():
+    # the paper's measured preference (Fig. 3): parallel at r=1, orthogonal r>=2
+    s1 = ss.star(2, 1)
+    s3 = ss.star(2, 3)
+    opt1, _ = choose_cover(s1, n=8)
+    opt3, _ = choose_cover(s3, n=8)
+    assert opt3 in ("orthogonal", "minimal")
+    c_par = cl.cover_outer_product_count(cl.make_cover(s3, "parallel"), 8)
+    c_orth = cl.cover_outer_product_count(cl.make_cover(s3, "orthogonal"), 8)
+    assert c_orth < c_par
+
+
+def test_engine_boundaries():
+    spec = ss.box(2, 1, seed=2)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    for boundary in ("zero", "periodic"):
+        eng = StencilEngine(spec, boundary=boundary)
+        assert eng(x).shape == x.shape
+    eng = StencilEngine(spec, boundary="valid")
+    assert eng(x).shape == (30, 30)
