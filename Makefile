@@ -1,0 +1,19 @@
+# Canonical test entry points (see ROADMAP "Tier-1 verify").
+PY := PYTHONPATH=src python
+
+.PHONY: test test-all test-slow bench-temporal
+
+# tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
+test:
+	$(PY) -m pytest -x -q
+
+# everything, including the slow exhaustive sweeps
+test-all:
+	$(PY) -m pytest -q -m ""
+
+# only the slow sweeps
+test-slow:
+	$(PY) -m pytest -q -m slow
+
+bench-temporal:
+	$(PY) benchmarks/bench_temporal.py

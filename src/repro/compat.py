@@ -1,0 +1,75 @@
+"""Cross-version JAX API shims shared by the whole package.
+
+Keep every version switch in one place so call sites read like the current
+API.  Nothing here may import device state at module import time.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size", "spmd_donate_argnums",
+           "partial_auto_shard_map_ok"]
+
+
+def partial_auto_shard_map_ok() -> bool:
+    """Whether partial-manual (``axis_names``/``auto``) shard_map compiles.
+
+    The old experimental shard_map lowers ``axis_index`` over manual axes to
+    a PartitionId HLO that the CPU SPMD partitioner rejects when auto axes
+    remain.  Native ``jax.shard_map`` handles it on every backend; the old
+    spelling only works off-CPU.
+    """
+    import jax
+    if hasattr(jax, "shard_map"):
+        return True
+    return jax.default_backend() != "cpu"
+
+
+def spmd_donate_argnums(donate, n_devices: int | None = None):
+    """Donation argnums, dropped where the partitioner can't take them.
+
+    XLA-CPU's SPMD partitioner (jaxlib 0.4.x) rejects donated buffers under
+    multi-device meshes ("PartitionId instruction is not supported for SPMD
+    partitioning").  Donation only saves device memory, so on the CPU
+    backend — fake-device dry-runs and tests — we simply turn it off.
+    """
+    import jax
+    if jax.default_backend() == "cpu" and (n_devices is None or n_devices > 1):
+        return ()
+    return tuple(donate)
+
+
+def axis_size(axis_name: str):
+    """``lax.axis_size`` where available; older JAX spells it psum(1)."""
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True,
+              axis_names=None):
+    """``jax.shard_map`` where available, else the experimental spelling.
+
+    ``check`` maps to ``check_vma`` (new) / ``check_rep`` (old) — the
+    replication/varying-manual-axes validation switch was renamed between
+    releases.  ``axis_names`` (new API) restricts which mesh axes the body
+    is manual over; the old API expresses the same thing inverted, as the
+    ``auto`` set of the remaining axes.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check, **kwargs)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    kwargs = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check, **kwargs)

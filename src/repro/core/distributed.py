@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
+from repro.compat import axis_size, shard_map
 from repro.core.engine import StencilEngine
 from repro.core.stencil_spec import StencilSpec
 
@@ -41,7 +41,7 @@ def _exchange_axis(block: jnp.ndarray, axis: int, r: int, mesh_axis: str,
     high side.  With non-periodic boundaries the edge devices receive zeros
     (Dirichlet-0), matching the single-device engine's boundary="zero".
     """
-    n_dev = lax.axis_size(mesh_axis)
+    n_dev = axis_size(mesh_axis)
     idx = lax.axis_index(mesh_axis)
 
     lo_strip = lax.slice_in_dim(block, 0, r, axis=axis)            # our low rows
@@ -137,7 +137,7 @@ def make_distributed_stepper(spec: StencilSpec, mesh: Mesh,
         return lax.fori_loop(0, steps, lambda _, a: sharded(a), x) if steps > 1 else sharded(x)
 
     sharded = shard_map(local_step, mesh=mesh, in_specs=pspec, out_specs=pspec,
-                        check_rep=False)
+                        check=False)
     return jax.jit(global_step,
                    in_shardings=NamedSharding(mesh, pspec),
                    out_shardings=NamedSharding(mesh, pspec))

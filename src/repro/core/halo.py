@@ -1,0 +1,70 @@
+"""Shared halo/padding layer: one definition of boundary semantics.
+
+Every execution path — the engine, the jnp/Pallas kernels, the reference
+oracles, the time stepper — needs the same three boundary conditions:
+
+  * ``valid``    — no padding; each application shrinks the domain by the
+    stencil order per side (paper Eq. 1 semantics).
+  * ``zero``     — Dirichlet-0: the field is clamped to zero outside the
+    domain *at every step*.
+  * ``periodic`` — wrap-around (circular correlation).
+
+This module is the single source of truth for how those conditions turn
+into pads, so the fused temporal sweep (DESIGN.md §Temporal) and the
+distributed halo exchange stay bit-consistent with the single-step paths.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["BOUNDARIES", "pad_mode", "pad_halo", "wrap_boundary",
+           "halo_width", "check_boundary"]
+
+BOUNDARIES = ("valid", "zero", "periodic")
+
+_PAD_MODE = {"zero": "constant", "periodic": "wrap"}
+
+
+def check_boundary(boundary: str) -> str:
+    if boundary not in BOUNDARIES:
+        raise ValueError(f"boundary {boundary!r} not in {BOUNDARIES}")
+    return boundary
+
+
+def halo_width(order: int, steps: int = 1) -> int:
+    """Halo each side needed to advance ``steps`` applications of a stencil
+    of radius ``order`` — the fused operator's radius (DESIGN.md §Temporal)."""
+    return order * steps
+
+
+def pad_mode(boundary: str) -> str | None:
+    """jnp.pad mode implementing ``boundary`` (None for 'valid')."""
+    check_boundary(boundary)
+    return _PAD_MODE.get(boundary)
+
+
+def pad_halo(x: jnp.ndarray, r: int, ndim: int, boundary: str) -> jnp.ndarray:
+    """Pad the trailing ``ndim`` spatial axes by ``r`` per side.
+
+    Leading axes are batch axes and are never padded.  'valid' returns the
+    input unchanged.
+    """
+    mode = pad_mode(boundary)
+    if mode is None or r == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - ndim) + [(r, r)] * ndim
+    return jnp.pad(x, pad, mode=mode)
+
+
+def wrap_boundary(core: Callable[[jnp.ndarray], jnp.ndarray], r: int,
+                  ndim: int, boundary: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Lift a valid-mode update into a shape-preserving boundary update."""
+    if check_boundary(boundary) == "valid":
+        return core
+
+    def padded(x):
+        return core(pad_halo(x, r, ndim, boundary))
+
+    return padded

@@ -10,18 +10,27 @@ input once instead of T times — the memory-bound stencil's traffic drops
 ~T-fold at the cost of a larger (but still banded) coefficient line, i.e.
 more MXU work, which is exactly the trade the roofline favours.
 
-Boundary semantics: exact for 'valid'; for 'zero' (Dirichlet-0) the fused
-operator is exact away from the boundary and matches the unfused evolution
-everywhere because zero padding commutes with correlation; for 'periodic'
-it is exact at any size >= the fused extent (wrap-around composition).
+Boundary semantics: exact for 'valid' (correlations compose freely with no
+boundary in sight) and for 'periodic' at any size >= the fused extent
+(wrap-around composition).  For 'zero' (Dirichlet-0) the fused operator is
+exact only at distance >= T*r from the boundary: the unfused evolution
+re-clamps the field to zero OUTSIDE the domain after every step, which the
+single fused correlation cannot express.  ``StencilEngine.sweep`` therefore
+splices sequentially-computed boundary strips of width T*r over the fused
+interior (DESIGN.md §Temporal) — the fused-extent edge case every temporal
+blocking scheme has to handle.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
-__all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio"]
+__all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio",
+           "fuse_schedule", "FuseCandidate", "FuseDecision",
+           "choose_fuse_depth"]
 
 
 def _correlate_full(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -66,3 +75,105 @@ def fused_flops_ratio(spec: StencilSpec, steps: int, n: int = 128) -> float:
 def fused_traffic_ratio(steps: int) -> float:
     """HBM traffic ratio fused/unfused: one read+write instead of T."""
     return 1.0 / steps
+
+
+def fuse_schedule(steps: int, depth: int) -> list[int]:
+    """Chunk ``steps`` applications into fused sweeps of ``depth`` steps.
+
+    ``steps=7, depth=3 -> [3, 3, 1]``: full-depth chunks plus one remainder
+    chunk so the total evolution is exactly ``steps`` applications.
+    """
+    if steps < 0 or depth < 1:
+        raise ValueError(f"need steps >= 0, depth >= 1; got {steps}, {depth}")
+    sched = [depth] * (steps // depth)
+    if steps % depth:
+        sched.append(steps % depth)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Fuse-depth chooser — the §5.2-style performance model applied to the §6
+# trade: deeper fusion divides HBM traffic by T (fused_traffic_ratio) but
+# grows the fused operator's order to T*r and with it the MXU work per
+# sweep (matrixization.mxu_flops of the fused cover).  The roofline winner
+# is whichever depth minimizes modelled time per ORIGINAL step.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FuseCandidate:
+    """Roofline model of one fuse depth at a fixed block size."""
+    depth: int
+    option: str               # cover option chosen for the fused spec
+    mxu_flops: int            # per output block, per fused sweep
+    hbm_bytes: float          # per output block, per fused sweep (halo read + write)
+    t_compute: float          # seconds per sweep, compute-bound
+    t_traffic: float          # seconds per sweep, bandwidth-bound
+    t_per_step: float         # max(t_compute, t_traffic) / depth
+    traffic_reduction: float  # unfused bytes / fused bytes, per original step
+
+
+@dataclasses.dataclass(frozen=True)
+class FuseDecision:
+    depth: int
+    candidates: tuple[FuseCandidate, ...]
+
+    def candidate(self, depth: int) -> FuseCandidate:
+        for c in self.candidates:
+            if c.depth == depth:
+                return c
+        raise KeyError(depth)
+
+
+def _block_bytes(block: tuple[int, ...], halo: int, dtype_bytes: int) -> float:
+    """HBM bytes to update one block: haloed read + write-back."""
+    read = float(np.prod([b + 2 * halo for b in block]))
+    write = float(np.prod(block))
+    return dtype_bytes * (read + write)
+
+
+def choose_fuse_depth(spec: StencilSpec, steps: int,
+                      block: tuple[int, ...] | None = None,
+                      peak_flops: float | None = None,
+                      hbm_bw: float | None = None,
+                      dtype_bytes: int = 4,
+                      max_depth: int = 8) -> FuseDecision:
+    """Pick the fuse depth T minimizing modelled time per original step.
+
+    The model combines :func:`repro.core.matrixization.mxu_flops` of the
+    fused spec's best cover (compute side) with the per-sweep HBM bytes
+    scaled by :func:`fused_traffic_ratio` (memory side); hardware defaults
+    come from ``repro.launch.mesh.TPU_V5E``.
+    """
+    # deferred imports: engine imports us at module load; launch is lazy so
+    # the core layer carries no hardware constants of its own
+    from repro.core.engine import choose_cover, default_block
+    from repro.core import matrixization as mx
+
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    if peak_flops is None or hbm_bw is None:
+        from repro.launch.mesh import TPU_V5E
+        peak_flops = TPU_V5E.peak_flops_bf16 if peak_flops is None else peak_flops
+        hbm_bw = TPU_V5E.hbm_bw if hbm_bw is None else hbm_bw
+    block = tuple(block) if block is not None else default_block(spec)
+    r = spec.order
+
+    base_bytes = _block_bytes(block, r, dtype_bytes)  # one unfused sweep
+    cands = []
+    for t in range(1, min(steps, max_depth) + 1):
+        fspec = spec if t == 1 else fuse_steps(spec, t)
+        option, cover = choose_cover(fspec, block[0])
+        flops = mx.mxu_flops(cover, block)
+        bytes_ = _block_bytes(block, fspec.order, dtype_bytes)
+        t_comp = flops / peak_flops
+        t_traf = bytes_ / hbm_bw
+        # per original step: the fused sweep advances t steps at once, so
+        # its traffic is base * (bytes_/base) * fused_traffic_ratio(t) ...
+        reduction = base_bytes / (bytes_ * fused_traffic_ratio(t))
+        cands.append(FuseCandidate(
+            depth=t, option=option, mxu_flops=int(flops), hbm_bytes=bytes_,
+            t_compute=t_comp, t_traffic=t_traf,
+            t_per_step=max(t_comp, t_traf) / t,
+            traffic_reduction=reduction))
+    best = min(cands, key=lambda c: c.t_per_step)
+    return FuseDecision(depth=best.depth, candidates=tuple(cands))

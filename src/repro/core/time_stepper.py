@@ -13,13 +13,26 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["EvolveResult", "evolve", "evolve_until"]
+from repro.core import halo
+
+__all__ = ["EvolveResult", "boundary_step", "evolve", "evolve_until",
+           "evolve_fused"]
 
 
 class EvolveResult(NamedTuple):
     state: jnp.ndarray
     steps_run: jnp.ndarray
     residual: jnp.ndarray
+
+
+def boundary_step(core: Callable, order: int, ndim: int,
+                  boundary: str) -> Callable:
+    """Shape-preserving step from a valid-mode update via the halo layer.
+
+    The same wrapper the engine uses — given any valid-mode core (oracle,
+    matrixized, Pallas) this produces the step function ``evolve`` needs.
+    """
+    return halo.wrap_boundary(core, order, ndim, boundary)
 
 
 def evolve(step_fn: Callable, x: jnp.ndarray, steps: int,
@@ -63,3 +76,16 @@ def evolve_until(step_fn: Callable, x: jnp.ndarray, tol: float,
 
     state, steps, res = lax.while_loop(cond, body, (x, jnp.asarray(0), jnp.asarray(jnp.inf)))
     return EvolveResult(state, steps, res)
+
+
+def evolve_fused(engine, x: jnp.ndarray, steps: int,
+                 fuse: int | str = "auto") -> EvolveResult:
+    """Evolve via the engine's fused multi-step sweep (temporal blocking).
+
+    Equivalent to ``evolve(engine.step_fn(), x, steps)`` but each fused
+    chunk reads/writes HBM once instead of ``fuse`` times (paper §6;
+    DESIGN.md §Temporal).  Requires a shape-preserving boundary.
+    """
+    final = engine.sweep(x, steps, fuse=fuse)
+    res = jnp.linalg.norm(final - x) / (jnp.linalg.norm(x) + 1e-30)
+    return EvolveResult(final, jnp.asarray(steps), res)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 
+from repro.kernels.pallas_compat import element_block_spec
+
 __all__ = ["banded_mixer_pallas_call"]
 
 
@@ -65,8 +67,8 @@ def banded_mixer_pallas_call(x: jnp.ndarray, band: jnp.ndarray,
     # Zero history: pad W-1 in front of time.
     xp = jnp.pad(x, ((w - 1, 0), (0, 0)))
 
-    in_specs = [pl.BlockSpec((pl.Element(block_t + w - 1), pl.Element(block_d)),
-                             lambda i, j: (i * block_t, j * block_d))]
+    in_specs = [element_block_spec((block_t + w - 1, block_d),
+                                   lambda i, j: (i * block_t, j * block_d))]
     if band.ndim == 1:
         # T[p, p + u] = band[w - 1 - u]  (gather band reversed; see module doc)
         tt = np.zeros((block_t, block_t + w - 1), np.float32)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coefficient_lines as cl
+from repro.core import halo
 from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 from repro.kernels import ref as kref
 from repro.kernels import stencil_mxu
@@ -41,8 +42,15 @@ def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
                        cover: cl.LineCover | None = None,
                        block: tuple[int, ...] | None = None,
                        option: str = "parallel",
+                       boundary: str = "valid",
                        interpret: bool = True) -> jnp.ndarray:
-    """Valid-mode stencil via the Pallas MXU kernel. Batch axes lead."""
+    """Stencil via the Pallas MXU kernel. Batch axes lead.
+
+    ``boundary`` uses the shared halo layer: 'valid' (default) shrinks the
+    spatial extent by ``spec.order`` per side; 'zero'/'periodic' pad first
+    and preserve shape.
+    """
+    x = halo.pad_halo(x, spec.order, spec.ndim, boundary)
     if cover is None:
         cover = cl.make_cover(spec, option)
     if block is None:

@@ -1,0 +1,30 @@
+"""Version-compat shims for the Pallas BlockSpec API.
+
+The stencil kernels need *overlapping element-indexed input windows* (the
+haloed slab around each output tile).  Newer JAX spells this with per-dim
+``pl.Element`` block sizes; older releases (<= 0.4.x) spell the same thing
+with ``indexing_mode=pl.unblocked`` — in both, the index map returns element
+offsets rather than block indices.  This module hides the difference so the
+kernels themselves stay version-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.experimental.pallas as pl
+
+__all__ = ["element_block_spec"]
+
+
+def element_block_spec(window: Sequence[int],
+                       index_map: Callable[..., tuple]) -> pl.BlockSpec:
+    """BlockSpec for a window addressed in *element* coordinates.
+
+    ``window`` is the per-instance window shape (may overlap between grid
+    instances, e.g. ``block + 2r`` halos); ``index_map`` must return element
+    offsets of the window origin (e.g. ``lambda i, j: (i * bi, j * bj)``).
+    """
+    window = tuple(int(w) for w in window)
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(w) for w in window), index_map)
+    return pl.BlockSpec(window, index_map, indexing_mode=pl.unblocked)

@@ -10,17 +10,22 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import halo
 from repro.core.stencil_spec import StencilSpec
 
 __all__ = ["stencil_ref", "stencil_ref_conv", "banded_mixer_ref"]
 
 
-def stencil_ref(x: jnp.ndarray, spec: StencilSpec, accum_dtype=jnp.float32) -> jnp.ndarray:
-    """Valid-mode gather stencil: ``B[p] = sum_o Cg[o] * A[p + o]``.
+def stencil_ref(x: jnp.ndarray, spec: StencilSpec, accum_dtype=jnp.float32,
+                boundary: str = "valid") -> jnp.ndarray:
+    """Gather stencil oracle: ``B[p] = sum_o Cg[o] * A[p + o]``.
 
-    Leading axes beyond ``spec.ndim`` are batch axes.
+    Leading axes beyond ``spec.ndim`` are batch axes.  ``boundary`` follows
+    the shared halo layer: 'valid' shrinks by ``spec.order`` per side;
+    'zero'/'periodic' are shape-preserving.
     """
     ndim, r = spec.ndim, spec.order
+    x = halo.pad_halo(x, r, ndim, boundary)
     lead_n = x.ndim - ndim
     cg = np.asarray(spec.gather_coeffs)
     out = None

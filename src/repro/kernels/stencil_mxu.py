@@ -29,6 +29,7 @@ import jax.experimental.pallas as pl
 from repro.core import matrixization as mx
 from repro.core.coefficient_lines import LineCover
 from repro.core.stencil_spec import StencilSpec
+from repro.kernels.pallas_compat import element_block_spec
 
 __all__ = ["KernelPlan", "build_kernel_plan", "stencil_pallas_call"]
 
@@ -137,8 +138,8 @@ def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
             raise ValueError(f"spatial size {s} not a multiple of block {b}")
     grid = tuple(s // b for s, b in zip(out_shape, block))
 
-    in_specs = [pl.BlockSpec(
-        tuple(pl.Element(b + 2 * r) for b in block),
+    in_specs = [element_block_spec(
+        tuple(b + 2 * r for b in block),
         lambda *ids: tuple(i * b for i, b in zip(ids, block)),
     )]
     t_inputs = []

@@ -26,16 +26,29 @@ TPU_V5E = HardwareSpec(name="tpu_v5e", peak_flops_bf16=197e12,
                        hbm_bw=819e9, ici_bw=50e9, hbm_bytes=16e9)
 
 
+def _auto_axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto, ...)`` where the installed JAX supports it.
+
+    ``jax.sharding.AxisType`` (and the matching ``jax.make_mesh`` kwarg)
+    only exist on newer JAX; older releases treat every axis as Auto
+    already, so omitting the kwarg is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    import inspect
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_types_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, elastic re-mesh)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_auto_axis_types_kwargs(len(axes)))

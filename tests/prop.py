@@ -36,24 +36,39 @@ class Draw:
     def bool(self) -> bool:
         return bool(self.rng.integers(0, 2))
 
+    def ints(self, k: int, lo: int, hi: int) -> tuple[int, ...]:
+        """k independent ints in [lo, hi] (e.g. random spatial dims)."""
+        return tuple(int(v) for v in self.rng.integers(lo, hi + 1, size=k))
+
 
 def prop_cases(n: int = 20, seed: int = 0):
-    """Run the decorated test ``n`` times with independent Draw objects."""
+    """Run the decorated test ``n`` times with independent Draw objects.
+
+    The decorated function must take ``draw`` as a keyword argument; any
+    other parameters pass through, so ``@pytest.mark.parametrize`` stacks on
+    top (each parametrized variant gets its own n-case sweep).
+    """
 
     def deco(fn):
-        def wrapper():
+        import inspect
+
+        def wrapper(*args, **kwargs):
             for case in range(n):
                 case_seed = seed * 10_000 + case
                 try:
-                    fn(draw=Draw(case_seed))
+                    fn(*args, draw=Draw(case_seed), **kwargs)
                 except AssertionError as e:
                     raise AssertionError(
                         f"property failed on case {case} (seed {case_seed}): {e}"
                     ) from e
-        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
-        # not the wrapped function's 'draw' parameter (it is not a fixture).
+        # pytest must see the original signature minus 'draw' (it is not a
+        # fixture): rebuild so parametrize arguments still resolve.
+        params = [p for name, p in inspect.signature(fn).parameters.items()
+                  if name != "draw"]
+        wrapper.__signature__ = inspect.Signature(params)
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
+        wrapper.pytestmark = list(getattr(fn, "pytestmark", []))
         return wrapper
 
     return deco

@@ -1,0 +1,89 @@
+"""Golden-value regression tests for the analysis layer.
+
+Every number below is hand-derivable from the paper's Table 1 / Table 2
+closed forms (2-D star parallel = (2r+n) + 2rn; orthogonal = 2(2r+n);
+3-D parallel = (2r+n) + 4rn; orthogonal = 3(2r+n); hybrid = 2(2r+n) + 2rn;
+box parallel = (2r+1)^(d-1) lines of (2r+n)) and from the MXU flop model
+(one (n, n+2r) Toeplitz contraction per multi-tap line, 2 flops/entry;
+single taps as VPU scaled shifts of 2*prod(block)).  They are asserted as
+LITERALS so a cover or model refactor cannot silently change modelled
+costs — if a change is intentional, re-derive the numbers by hand.
+"""
+import pytest
+
+from repro.core import coefficient_lines as cl
+from repro.core import matrixization as mx
+from repro.core import stencil_spec as ss
+
+N = 16                      # output rows per block for the op counts
+BLOCK2D = (16, 16)
+BLOCK3D = (4, 8, 8)
+
+# (spec kind, ndim, r, cover option) -> (matmul_count, outer_products@N, mxu_flops@BLOCK)
+GOLDEN = {
+    ("box", 2, 1, "parallel"):    (3, 54, 27648),
+    ("box", 2, 1, "minimal"):     (3, 54, 27648),
+    ("box", 2, 2, "parallel"):    (5, 100, 51200),
+    ("box", 2, 2, "minimal"):     (5, 100, 51200),
+    ("box", 2, 3, "parallel"):    (7, 154, 78848),
+    ("box", 2, 3, "minimal"):     (7, 154, 78848),
+    ("star", 2, 1, "parallel"):   (1, 50, 10240),
+    ("star", 2, 1, "orthogonal"): (2, 36, 18432),
+    ("star", 2, 1, "minimal"):    (2, 36, 18432),
+    ("star", 2, 2, "parallel"):   (1, 84, 12288),
+    ("star", 2, 2, "orthogonal"): (2, 40, 20480),
+    ("star", 2, 3, "parallel"):   (1, 118, 14336),
+    ("star", 2, 3, "orthogonal"): (2, 44, 22528),
+    ("box", 3, 1, "parallel"):    (9, 162, 27648),
+    ("box", 3, 2, "parallel"):    (25, 500, 102400),
+    ("box", 3, 3, "parallel"):    (49, 1078, 250880),
+    ("star", 3, 1, "parallel"):   (1, 82, 5120),
+    ("star", 3, 1, "orthogonal"): (3, 54, 13312),
+    ("star", 3, 1, "hybrid"):     (2, 68, 11264),
+    ("star", 3, 2, "parallel"):   (1, 148, 8192),
+    ("star", 3, 2, "orthogonal"): (3, 60, 16384),
+    ("star", 3, 2, "hybrid"):     (2, 104, 14336),
+    ("star", 3, 3, "parallel"):   (1, 214, 11264),
+    ("star", 3, 3, "orthogonal"): (3, 66, 19456),
+    ("star", 3, 3, "hybrid"):     (2, 140, 17408),
+    ("diag", 2, 1, "diagonal"):   (2, 36, 2560),
+    ("diag", 2, 1, "parallel"):   (2, 52, 18944),
+}
+
+
+def _spec(kind, ndim, r):
+    if kind == "box":
+        return ss.box(ndim, r)
+    if kind == "star":
+        return ss.star(ndim, r)
+    return ss.diagonal(r)
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN), ids=lambda k: f"{k[0]}{k[1]}d_r{k[2]}-{k[3]}")
+def test_analysis_golden_values(key):
+    kind, ndim, r, option = key
+    mm_gold, ops_gold, flops_gold = GOLDEN[key]
+    spec = _spec(kind, ndim, r)
+    cover = cl.make_cover(spec, option)
+    block = BLOCK2D if ndim == 2 else BLOCK3D
+    assert mx.matmul_count(cover) == mm_gold
+    assert cl.cover_outer_product_count(cover, N) == ops_gold
+    assert mx.mxu_flops(cover, block) == flops_gold
+
+
+def test_golden_closed_forms_crosscheck():
+    """Spot-check the literals against the Table 1/2 closed forms so the
+    table above can be audited without re-running the code."""
+    r, n = 2, N
+    assert GOLDEN[("star", 2, 2, "parallel")][1] == (2 * r + n) + 2 * r * n
+    assert GOLDEN[("star", 2, 2, "orthogonal")][1] == 2 * (2 * r + n)
+    assert GOLDEN[("star", 3, 2, "parallel")][1] == (2 * r + n) + 4 * r * n
+    assert GOLDEN[("star", 3, 2, "orthogonal")][1] == 3 * (2 * r + n)
+    assert GOLDEN[("star", 3, 2, "hybrid")][1] == 2 * (2 * r + n) + 2 * r * n
+    assert GOLDEN[("box", 2, 2, "parallel")][1] == (2 * r + 1) * (2 * r + n)
+    assert GOLDEN[("box", 3, 2, "parallel")][1] == (2 * r + 1) ** 2 * (2 * r + n)
+    # MXU flop model: multi-tap line = 2 * n * (n + 2r) * rest
+    assert GOLDEN[("box", 2, 2, "parallel")][2] == 5 * 2 * 16 * 20 * 16
+    # star 2-D parallel: 1 matmul line + 2r single-tap VPU lines
+    assert GOLDEN[("star", 2, 2, "parallel")][2] == 2 * 16 * 20 * 16 + \
+        2 * r * 2 * 16 * 16

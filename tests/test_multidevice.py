@@ -110,6 +110,7 @@ def test_shard_map_dp_gradient_sync_with_compression():
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import shard_map
         from repro.launch.mesh import make_mesh
 
         mesh = make_mesh((8,), ("data",))
@@ -120,12 +121,12 @@ def test_shard_map_dp_gradient_sync_with_compression():
         def dp(w, x, y):
             g = jax.grad(lambda w: jnp.mean((x @ w - y) ** 2))(w)
             gw = g.astype(jnp.bfloat16)  # compress before the wire
-            # NOTE: check_vma=False — with VMA checking on, out_specs=P()
+            # NOTE: check=False — with VMA/rep checking on, out_specs=P()
             # stacks an implicit psum on top of pmean (measured exactly 8x)
             return jax.lax.pmean(gw.astype(jnp.float32), axis_name="data")
 
-        f = jax.shard_map(dp, mesh=mesh, in_specs=(P(), P("data"), P("data")),
-                          out_specs=P(), check_vma=False)
+        f = shard_map(dp, mesh=mesh, in_specs=(P(), P("data"), P("data")),
+                      out_specs=P(), check=False)
         g_dp = f(w, x, y)
         g_ref = jax.grad(lambda w: jnp.mean((x @ w - y) ** 2))(w)
         err = float(jnp.abs(g_dp - g_ref).max()) / (float(jnp.abs(g_ref).max()) + 1e-9)

@@ -1,0 +1,146 @@
+"""Fused multi-step sweep parity: ``StencilEngine.sweep`` vs sequential
+reference steps, across the PAPER_SUITE, all three boundaries, and both
+the jnp and Pallas backends (acceptance criteria of the temporal-fusion
+pipeline; see DESIGN.md §Temporal)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import stencil_spec as ss
+from repro.core import temporal
+from repro.core.engine import StencilEngine
+from repro.core.time_stepper import evolve_fused
+from repro.kernels.ref import stencil_ref
+
+from prop import prop_cases
+
+SUITE = ss.PAPER_SUITE()
+BOUNDARIES = ("valid", "zero", "periodic")
+
+# Representative tier-1 subset; the slow sweep covers the whole suite.
+FAST_SPECS = ["box2d_r1", "star2d_r2", "diag2d_r1", "box3d_r1", "star3d_r1"]
+
+
+def _sequential_ref(x, spec, steps, boundary):
+    for _ in range(steps):
+        x = stencil_ref(x, spec, boundary=boundary)
+    return x
+
+
+def _grid_for(spec, steps, fuse):
+    # large enough for the deepest chunk under every boundary's cap
+    n = max(4 * spec.order * min(fuse, steps) + 4, 6 * spec.order + 6)
+    if spec.ndim == 3:
+        n = min(n, 20)
+    return (n,) * spec.ndim
+
+
+def _check_sweep(spec, boundary, backend, steps=3, fuse=2, atol=1e-4):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=_grid_for(spec, steps, fuse)), jnp.float32)
+    ref = _sequential_ref(x, spec, steps, boundary)
+    block = (16, 16) if spec.ndim == 2 else (4, 8, 8)
+    eng = StencilEngine(spec, backend=backend, block=block, boundary=boundary)
+    out = eng.sweep(x, steps, fuse=fuse)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=atol,
+                               err_msg=f"{spec.describe()} {boundary} {backend}")
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("name", FAST_SPECS)
+def test_sweep_matches_sequential_jnp(name, boundary):
+    _check_sweep(SUITE[name], boundary, "jnp")
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("name", ["box2d_r1", "star2d_r2", "box3d_r1"])
+def test_sweep_matches_sequential_pallas(name, boundary):
+    _check_sweep(SUITE[name], boundary, "pallas")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("name", sorted(SUITE))
+def test_sweep_matches_sequential_full_suite(name, boundary, backend):
+    _check_sweep(SUITE[name], boundary, backend)
+
+
+@prop_cases(n=8, seed=41)
+def test_sweep_random_depths_and_schedules(draw):
+    """Any fuse depth (including non-divisors and depths beyond the shape
+    cap) must still reproduce the sequential evolution exactly."""
+    spec = (ss.box if draw.bool() else ss.star)(2, draw.int(1, 2),
+                                                seed=draw.int(0, 99))
+    steps = draw.int(1, 7)
+    fuse = draw.choice([1, 2, 3, 5, "auto"])
+    boundary = draw.choice(list(BOUNDARIES))
+    n = 2 * spec.order * steps + draw.int(6, 16)
+    x = jnp.asarray(draw.normal((n, n)), jnp.float32)
+    ref = _sequential_ref(x, spec, steps, boundary)
+    eng = StencilEngine(spec, boundary=boundary)
+    out = eng.sweep(x, steps, fuse=fuse)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_sweep_zero_steps_and_validation():
+    spec = ss.box(2, 1, seed=0)
+    eng = StencilEngine(spec, boundary="periodic")
+    x = jnp.ones((12, 12), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(eng.sweep(x, 0)), np.asarray(x))
+    with pytest.raises(ValueError):
+        eng.sweep(x, 3, fuse=0)
+    with pytest.raises(ValueError):
+        eng.sweep(x, -1)
+
+
+def test_sweep_batched_leading_axes():
+    spec = ss.star(2, 1, seed=3)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 20, 20)), jnp.float32)
+    eng = StencilEngine(spec, boundary="zero")
+    out = eng.sweep(x, 4, fuse=2)
+    ref = _sequential_ref(x, spec, 4, "zero")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_boundary_step_lifts_any_core():
+    """The time stepper's halo-layer wrapper turns ANY valid-mode core —
+    here the naive oracle, not an engine — into the same shape-preserving
+    step the engine builds."""
+    from repro.core.time_stepper import boundary_step
+    spec = ss.box(2, 1, seed=8)
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(18, 18)), jnp.float32)
+    for boundary in ("zero", "periodic"):
+        step = boundary_step(lambda a: stencil_ref(a, spec),
+                             spec.order, spec.ndim, boundary)
+        eng = StencilEngine(spec, boundary=boundary)
+        np.testing.assert_allclose(np.asarray(step(x)), np.asarray(eng(x)),
+                                   atol=2e-5)
+
+
+def test_evolve_fused_matches_evolve():
+    spec = ss.box(2, 1, seed=5)
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(24, 24)), jnp.float32)
+    eng = StencilEngine(spec, boundary="periodic")
+    res = evolve_fused(eng, x, steps=6, fuse=3)
+    ref = _sequential_ref(x, spec, 6, "periodic")
+    np.testing.assert_allclose(np.asarray(res.state), np.asarray(ref),
+                               atol=1e-4)
+    assert int(res.steps_run) == 6
+
+
+def test_sweep_replans_pallas_kernel_for_fused_spec():
+    """The fused chunk must run through a re-planned higher-order kernel,
+    not T repetitions of the base plan."""
+    spec = ss.box(2, 1, seed=2)
+    eng = StencilEngine(spec, backend="pallas", block=(16, 16),
+                        boundary="periodic")
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(32, 32)), jnp.float32)
+    eng.sweep(x, 4, fuse=4)
+    fused_eng = eng._fused_engines[4]
+    assert fused_eng.plan.spec.order == 4 * spec.order
+    assert fused_eng.plan.spec.extent == 2 * 4 * spec.order + 1

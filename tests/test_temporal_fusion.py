@@ -1,4 +1,6 @@
-"""Temporal fusion (beyond-paper): T fused steps == T sequential steps."""
+"""Temporal fusion (beyond-paper): T fused steps == T sequential steps,
+including the boundary semantics and fused-extent edge cases documented in
+core/temporal.py."""
 import numpy as np
 import pytest
 
@@ -6,7 +8,9 @@ import jax.numpy as jnp
 
 from repro.core import stencil_spec as ss
 from repro.core.engine import StencilEngine
-from repro.core.temporal import fuse_steps, fused_flops_ratio, fused_traffic_ratio
+from repro.core.temporal import (FuseDecision, choose_fuse_depth,
+                                 fuse_schedule, fuse_steps,
+                                 fused_flops_ratio, fused_traffic_ratio)
 from repro.kernels.ref import stencil_ref
 
 from prop import prop_cases
@@ -47,3 +51,125 @@ def test_fusion_economics():
     assert fused_traffic_ratio(4) == 0.25
     ratio = fused_flops_ratio(spec, steps=4, n=128)
     assert 0.5 < ratio < 4.0  # bounded compute growth for the 4x traffic cut
+
+
+# ---------------------------------------------------------------------------
+# Boundary semantics of the fused operator itself (core/temporal.py claims)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("boundary", ["valid", "zero", "periodic"])
+@prop_cases(n=6, seed=59)
+def test_fused_sweep_equals_sequential_all_boundaries(boundary, draw):
+    """fuse_steps(spec, T) applied ONCE (through the engine's sweep, which
+    owns the zero-boundary strip correction) equals T unfused steps."""
+    ndim = draw.choice([2, 3])
+    r = draw.int(1, 2)
+    steps = draw.int(2, 3)
+    spec = (ss.box if draw.bool() else ss.star)(ndim, r, seed=draw.int(0, 50))
+    n = 2 * r * steps * 2 + draw.int(4, 8)
+    x = jnp.asarray(draw.normal((n,) * ndim), jnp.float32)
+    ref = x
+    for _ in range(steps):
+        ref = stencil_ref(ref, spec, boundary=boundary)
+    eng = StencilEngine(spec, boundary=boundary)
+    out = eng.sweep(x, steps, fuse=steps)  # one fused chunk
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_fused_zero_boundary_needs_strip_correction():
+    """Documented edge case: the bare fused operator under zero-padding is
+    the zero-EXTENDED evolution — exact in the interior, wrong within T*r
+    of the boundary (per-step clamping is not a single correlation)."""
+    spec = ss.box(2, 1, seed=3)
+    steps = 3
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(20, 20)), jnp.float32)
+    ref = x
+    for _ in range(steps):
+        ref = stencil_ref(ref, spec, boundary="zero")
+    naive = StencilEngine(fuse_steps(spec, steps), boundary="zero")(x)
+    rt = spec.order * steps
+    inner = np.s_[rt:-rt, rt:-rt]
+    np.testing.assert_allclose(np.asarray(naive)[inner], np.asarray(ref)[inner],
+                               atol=1e-5)          # interior exact
+    assert float(jnp.abs(naive - ref).max()) > 1e-3  # boundary wrong
+    corrected = StencilEngine(spec, boundary="zero").sweep(x, steps, fuse=steps)
+    np.testing.assert_allclose(np.asarray(corrected), np.asarray(ref), atol=1e-4)
+
+
+def test_fused_periodic_minimum_extent_edge_case():
+    """Periodic fusion is exact down to the smallest grid the halo wrap
+    allows (n == T*r, the fused-extent edge); deeper fusion on the same
+    grid is capped by the engine rather than mis-padded."""
+    spec = ss.box(2, 1, seed=9)
+    steps = 4
+    n = spec.order * steps  # == fused halo width: wrap pad exactly legal
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    ref = x
+    for _ in range(steps):
+        ref = stencil_ref(ref, spec, boundary="periodic")
+    eng = StencilEngine(spec, boundary="periodic")
+    out = eng.sweep(x, steps, fuse=steps)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    # fuse deeper than the grid allows: engine caps the chunk depth instead
+    # of producing an illegal wrap pad
+    out2 = eng.sweep(x, steps + 4, fuse=steps + 4)
+    ref2 = ref
+    for _ in range(4):
+        ref2 = stencil_ref(ref2, spec, boundary="periodic")
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref2), atol=1e-4)
+
+
+def test_fused_valid_extent_bookkeeping():
+    """Valid-mode fused sweep shrinks by order*steps total, matching the
+    sequential shrink step-for-step, down to a single output point."""
+    spec = ss.star(2, 2, seed=4)
+    steps = 3
+    n = 2 * spec.order * steps + 1  # final output is exactly (1, 1)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    ref = x
+    for _ in range(steps):
+        ref = stencil_ref(ref, spec)
+    assert ref.shape == (1, 1)
+    out = StencilEngine(spec, boundary="valid").sweep(x, steps, fuse=steps)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fuse scheduling + the roofline depth chooser
+# ---------------------------------------------------------------------------
+
+def test_fuse_schedule():
+    assert fuse_schedule(7, 3) == [3, 3, 1]
+    assert fuse_schedule(6, 3) == [3, 3]
+    assert fuse_schedule(2, 5) == [2]
+    assert fuse_schedule(0, 4) == []
+    with pytest.raises(ValueError):
+        fuse_schedule(3, 0)
+
+
+def test_choose_fuse_depth_memory_bound_prefers_fusion():
+    """At paper-scale blocks the r=1 stencils are HBM-bound: the model must
+    pick T > 1, and the modelled traffic reduction must be >= T/2."""
+    spec = ss.star(2, 1, seed=1)
+    dec = choose_fuse_depth(spec, steps=8, block=(128, 128))
+    assert isinstance(dec, FuseDecision)
+    assert dec.depth > 1
+    chosen = dec.candidate(dec.depth)
+    assert chosen.traffic_reduction >= dec.depth / 2
+    # depth=1 candidate is the unfused baseline with ratio 1
+    assert dec.candidate(1).traffic_reduction == pytest.approx(1.0)
+
+
+def test_choose_fuse_depth_caps_and_monotonic_traffic():
+    spec = ss.box(2, 1, seed=2)
+    dec = choose_fuse_depth(spec, steps=3, block=(64, 64), max_depth=8)
+    assert len(dec.candidates) == 3  # capped by steps
+    # traffic per original step falls monotonically with depth
+    ratios = [c.traffic_reduction for c in dec.candidates]
+    assert all(b > a for a, b in zip(ratios, ratios[1:]))
+    with pytest.raises(ValueError):
+        choose_fuse_depth(spec, steps=0)
