@@ -1,7 +1,7 @@
 # Canonical test entry points (see ROADMAP "Tier-1 verify").
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-slow bench-temporal
+.PHONY: test test-all test-slow bench-temporal plan-report
 
 # tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
 test:
@@ -17,3 +17,9 @@ test-slow:
 
 bench-temporal:
 	$(PY) benchmarks/bench_temporal.py
+
+# planner decision record for the PAPER_SUITE on TPU_V5E; the tier-1 golden
+# test (tests/test_plan_golden.py) diffs this output against
+# tests/golden/plan_report.txt — regenerate the golden through this target.
+plan-report:
+	@$(PY) -m repro.launch.plan_report

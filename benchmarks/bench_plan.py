@@ -1,0 +1,71 @@
+"""Planner end-to-end: modelled decision vs measured wall-clock.
+
+For each PAPER_SUITE cell, plan() the problem, compile() the winner, and
+time it against the naive sequential engine run — the measured speedup
+lands next to the modelled per-step roofline figures so cost-model drift
+is visible (the CPU container measures XLA-CPU, the model measures
+TPU_V5E; the *ranking* is what should agree).
+
+    PYTHONPATH=src python benchmarks/bench_plan.py
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core.engine import StencilEngine
+
+
+def _time(fn, x, repeats=5):
+    fn(x).block_until_ready()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(names=("box2d_r1", "star2d_r2"), n=256, steps=16, repeats=5):
+    rows = []
+    suite = api.PAPER_SUITE()
+    for name in names:
+        spec = suite[name]
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(n,) * spec.ndim),
+                        jnp.float32)
+        problem = api.StencilProblem(spec, (n,) * spec.ndim,
+                                     boundary="periodic", steps=steps)
+        p = api.plan(problem, backends=["jnp"])  # interpretable on CPU
+        compiled = api.compile(p)
+        eng = StencilEngine(spec, boundary="periodic")
+        seq = jax.jit(lambda a, s=steps: eng.run(a, steps=s))
+        fused = jax.jit(compiled.fn)
+        t_seq = _time(seq, x, repeats)
+        t_fused = _time(fused, x, repeats)
+        err = float(jnp.abs(seq(x) - fused(x)).max())
+        ch = p.chosen()
+        rows.append({
+            "name": name, "depth": p.fuse_depth, "cover": p.option,
+            "backend": p.backend,
+            "t_seq_us": t_seq * 1e6, "t_plan_us": t_fused * 1e6,
+            "speedup": t_seq / t_fused,
+            "model_step_ns": ch.t_per_step * 1e9,
+            "max_err": err,
+        })
+    return rows
+
+
+def main():
+    print("name,depth,cover,backend,t_seq_us,t_plan_us,cpu_speedup,"
+          "v5e_model_step_ns,max_err")
+    for r in run():
+        print(f"{r['name']},{r['depth']},{r['cover']},{r['backend']},"
+              f"{r['t_seq_us']:.0f},{r['t_plan_us']:.0f},{r['speedup']:.2f},"
+              f"{r['model_step_ns']:.1f},{r['max_err']:.1e}")
+
+
+if __name__ == "__main__":
+    main()

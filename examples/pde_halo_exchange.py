@@ -1,9 +1,10 @@
-"""Distributed 2-D heat equation with halo exchange (end-to-end driver for
-the paper's technique at scale).
+"""Distributed 2-D heat equation through the unified plan/compile API.
 
-Runs the stencil matrixization engine under shard_map on a device mesh:
-the grid is domain-decomposed, halos travel by collective-permute, and the
-interior update overlaps the exchange (DESIGN.md §6).
+The problem declares the mesh; the planner picks cover x backend x fuse
+depth by roofline model and records every decision; compile() emits the
+fused sharded stepper — ONE ``T*r``-deep halo exchange per fused chunk
+(collective-permutes counted below), interior update overlapped with the
+wire time (DESIGN.md §Planner).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python examples/pde_halo_exchange.py
@@ -13,10 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import box
-from repro.core.distributed import make_distributed_stepper
+from repro import api
 from repro.core.engine import StencilEngine
-from repro.core.temporal import choose_fuse_depth
 from repro.launch.mesh import make_mesh
 
 
@@ -28,41 +27,48 @@ def main():
     print(f"devices={n_dev} mesh=({gx},{gy})")
 
     # 2D9P heat-like stencil (normalized coefficients -> diffusion)
-    spec = box(2, 1, seed=0)
-    step = make_distributed_stepper(spec, mesh, ("gx", "gy"),
-                                    periodic=True, overlap=True, steps=10)
+    spec = api.box(2, 1, seed=0)
+    steps = 50
+    problem = api.StencilProblem(spec, grid=(256, 256), boundary="periodic",
+                                 steps=steps, mesh=mesh,
+                                 grid_axes=("gx", "gy"))
+    # jnp backend pin: this container runs Pallas in interpret mode only
+    plan = api.plan(problem, backends=["jnp"], max_depth=5)
+    print(plan.explain())
 
+    step = api.compile(plan, mesh=mesh)
     field = jnp.zeros((256, 256), jnp.float32).at[128, 128].set(1000.0)
-    out = field
-    for chunk in range(5):
-        out = step(out)
-        print(f"step {10 * (chunk + 1):3d}: mass={float(out.sum()):9.3f} "
-              f"peak={float(out.max()):.5f}")
+    out = step(field)
+    print(f"after {steps} steps (schedule {plan.fuse_schedule}): "
+          f"mass={float(out.sum()):9.3f} peak={float(out.max()):.5f}")
 
     # verify against the single-device engine
     eng = StencilEngine(spec, boundary="periodic")
     ref = field
-    for _ in range(50):
+    for _ in range(steps):
         ref = eng(ref)
     err = float(jnp.abs(out - ref).max())
-    print(f"max |distributed - single-device| after 50 steps: {err:.2e}")
+    print(f"max |distributed fused - single-device sequential|: {err:.2e}")
     assert err < 1e-4
 
-    # show the collective schedule proof
-    txt = jax.jit(step).lower(jax.ShapeDtypeStruct(field.shape, field.dtype)) \
-        .compile().as_text()
-    print(f"collective-permutes in compiled HLO: {txt.count('collective-permute')}")
+    # the collective schedule proof: one T*r-deep exchange per fused chunk
+    n_chunks = len(plan.fuse_schedule)
+    n_pp = str(jax.make_jaxpr(step.global_fn)(field)).count("ppermute")
+    print(f"ppermutes in jaxpr: {n_pp} "
+          f"(= {n_chunks} chunks x 2 mesh axes x 2 directions)")
+    assert n_pp == n_chunks * 2 * 2
 
-    # fused temporal sweep (paper §6): the same 50 steps as fused multi-step
-    # chunks — the roofline chooser picks the depth, traffic drops ~depth-fold
-    dec = choose_fuse_depth(spec, steps=50, block=eng.plan.block)
-    cand = dec.candidate(dec.depth)
-    fused = jax.jit(eng.sweep_fn(50, fuse="auto"))(field)
-    err_f = float(jnp.abs(fused - ref).max())
-    print(f"fused sweep: depth={dec.depth} (cover '{cand.option}'), "
-          f"modelled HBM-traffic reduction {cand.traffic_reduction:.1f}x, "
-          f"max |fused - sequential| = {err_f:.2e}")
-    assert err_f < 1e-4
+    txt = jax.jit(step.fn).lower(
+        jax.ShapeDtypeStruct(field.shape, field.dtype)).compile().as_text()
+    print(f"collective-permutes in compiled HLO: "
+          f"{txt.count('collective-permute')}")
+
+    # the modelled story the planner told
+    ch = plan.chosen()
+    print(f"chosen depth={plan.fuse_depth} cover={plan.option} "
+          f"backend={plan.backend}: modelled "
+          f"{ch.t_per_step * 1e9:.1f} ns/step on {plan.hw['name']}, "
+          f"halo traffic {ch.ici_bytes / 1e3:.1f} kB/chunk over ICI")
 
 
 if __name__ == "__main__":

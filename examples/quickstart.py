@@ -5,15 +5,15 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (PAPER_SUITE, StencilEngine, box, star, choose_cover,
-                        matrixized_apply, make_cover)
+from repro import api
+from repro.core import matrixized_apply, make_cover
 from repro.core.codegen import generate_update
 from repro.kernels.ref import stencil_ref
 
 
 def main():
     # 1. define a stencil (2D9P box, order 1) and inspect its duality
-    spec = box(2, 1, seed=0)
+    spec = api.box(2, 1, seed=0)
     print("gather coefficients:\n", np.asarray(spec.gather_coeffs).round(3))
     print("scatter coefficients (Eq.5 C^s = J C^g J):\n",
           np.asarray(spec.scatter_coeffs).round(3))
@@ -26,22 +26,31 @@ def main():
     err = float(jnp.abs(y - stencil_ref(x, spec)).max())
     print(f"\nmatrixized vs gather oracle: max err {err:.2e}")
 
-    # 3. the engine picks the cover by op-count model, runs any backend
-    eng = StencilEngine(star(2, 3, seed=1), option="auto", backend="pallas",
-                        block=(64, 64))
-    print(f"auto-chosen cover for star2d r=3: {eng.plan.option} "
-          f"({eng.plan.op_count()} outer-product-equivalents per block)")
+    # 3. the unified API: declare the problem, plan it, inspect EVERY
+    #    decision with its modelled roofline cost, then compile
+    problem = api.StencilProblem(api.star(2, 3, seed=1), grid=(128, 128),
+                                 boundary="periodic", steps=32)
+    p = api.plan(problem)          # frozen + JSON-serializable
+    print("\n" + p.explain())
+    assert api.ExecutionPlan.from_json(p.to_json()) == p  # ships as JSON
 
-    # 4. the code generator (paper §4.4) emits the unrolled update
+    # 4. the code generator (paper §4.4) emits the unrolled update for the
+    #    planned engine (the engine is a thin wrapper over the same plan)
+    eng = api.StencilEngine.from_execution_plan(p)
     gen = generate_update(eng.plan)
     print("\ngenerated kernel (head):")
     print("\n".join(gen.source.splitlines()[:8]))
 
-    # 5. evolve a heat-like field 100 steps with periodic boundaries
-    eng2 = StencilEngine(box(2, 1, seed=3), boundary="periodic")
+    # 5. evolve a heat-like field: compile(plan) runs the fused schedule
+    #    (here on CPU; the same plan compiles to Mosaic on TPU)
     field = jnp.zeros((64, 64)).at[32, 32].set(100.0)
-    out = eng2.run(field, steps=100)
-    print(f"\nafter 100 steps: total mass {float(out.sum()):.3f} "
+    prob2 = api.StencilProblem(api.box(2, 1, seed=3), grid=(64, 64),
+                               boundary="periodic", steps=100)
+    run = api.compile(api.plan(prob2, backends=["jnp"]))
+    out = run(field)
+    print(f"\nafter 100 steps (fuse schedule "
+          f"{run.plan.schedule_str()}): "
+          f"total mass {float(out.sum()):.3f} "
           f"(conserved from {float(field.sum()):.3f}), "
           f"peak {float(out.max()):.4f}")
 

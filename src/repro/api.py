@@ -1,0 +1,38 @@
+"""Public facade: ``StencilProblem -> plan() -> ExecutionPlan -> compile()``.
+
+    from repro import api
+
+    problem = api.StencilProblem(api.star(2, 2), grid=(256, 256),
+                                 boundary="periodic", steps=32)
+    p = api.plan(problem)           # frozen, JSON-serializable decisions
+    print(p.explain())              # per-decision modelled roofline costs
+    run = api.compile(p)            # jit-ready executable
+    y = run(x)
+
+Distributed: give the problem a mesh and per-axis mesh names and the
+compiled stepper exchanges a single ``T*r``-deep halo once per fused chunk
+(DESIGN.md §Planner).  Third-party kernels plug in through
+:func:`register_backend` and are scored by the same cost model.
+"""
+from __future__ import annotations
+
+from repro.core.engine import (Backend, StencilEngine, backend_names,
+                               choose_cover, default_block, get_backend,
+                               legal_covers, register_backend)
+from repro.core.planner import (CandidateCost, CompiledStencil, ExecutionPlan,
+                                PLAN_VERSION, StencilProblem, candidate_cost,
+                                compile_plan, plan)
+from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
+                                     from_gather_coeffs, star)
+
+compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
+#                         inside this namespace only, by design)
+
+__all__ = [
+    "StencilProblem", "ExecutionPlan", "CandidateCost", "CompiledStencil",
+    "plan", "compile", "compile_plan", "candidate_cost", "PLAN_VERSION",
+    "StencilEngine", "Backend", "register_backend", "get_backend",
+    "backend_names", "choose_cover", "legal_covers", "default_block",
+    "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs",
+    "PAPER_SUITE",
+]

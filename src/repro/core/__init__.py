@@ -1,22 +1,31 @@
 """Stencil Matrixization core (the paper's contribution, in JAX).
 
-Public API:
+Public API (prefer the ``repro.api`` facade for the plan/compile pipeline):
     StencilSpec / box / star / diagonal       -- repro.core.stencil_spec
     make_cover / LineCover                    -- repro.core.coefficient_lines
     matrixized_apply / separable_apply        -- repro.core.matrixization
     StencilEngine / choose_cover              -- repro.core.engine
+    register_backend / get_backend            -- repro.core.engine (registry)
+    StencilProblem / plan / compile_plan      -- repro.core.planner
     generate_update                           -- repro.core.codegen
     make_distributed_stepper / halo_exchange  -- repro.core.distributed
+    make_fused_distributed_stepper            -- repro.core.distributed
     evolve / evolve_until                     -- repro.core.time_stepper
 """
 from repro.core.stencil_spec import StencilSpec, box, star, diagonal, from_gather_coeffs, PAPER_SUITE
 from repro.core.coefficient_lines import make_cover, LineCover, CoefficientLine
 from repro.core.matrixization import matrixized_apply, separable_apply, toeplitz_band
-from repro.core.engine import StencilEngine, StencilPlan, choose_cover, legal_covers
+from repro.core.engine import (StencilEngine, StencilPlan, choose_cover,
+                               legal_covers, register_backend, get_backend,
+                               backend_names)
+from repro.core.planner import (StencilProblem, ExecutionPlan, plan,
+                                compile_plan)
 
 __all__ = [
     "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs", "PAPER_SUITE",
     "make_cover", "LineCover", "CoefficientLine",
     "matrixized_apply", "separable_apply", "toeplitz_band",
     "StencilEngine", "StencilPlan", "choose_cover", "legal_covers",
+    "register_backend", "get_backend", "backend_names",
+    "StencilProblem", "ExecutionPlan", "plan", "compile_plan",
 ]

@@ -34,6 +34,7 @@ __all__ = [
     "hybrid_cover",
     "minimal_cover_2d",
     "diagonal_cover",
+    "COVER_OPTIONS",
     "make_cover",
     "cover_outer_product_count",
     "vectorized_instruction_count",
@@ -283,10 +284,14 @@ _COVERS = {
     "diagonal": diagonal_cover,
 }
 
+#: Every cover option name — the planner's search space along the cover
+#: axis (``engine.legal_covers`` narrows it per spec shape/ndim).
+COVER_OPTIONS = tuple(sorted(_COVERS))
+
 
 def make_cover(spec: StencilSpec, option: str) -> LineCover:
     if option not in _COVERS:
-        raise KeyError(f"unknown cover option {option!r}; choose from {sorted(_COVERS)}")
+        raise KeyError(f"unknown cover option {option!r}; choose from {list(COVER_OPTIONS)}")
     cover = _COVERS[option](spec)
     cover.validate()
     return cover

@@ -11,15 +11,22 @@ first; XLA's async collectives then overlap the interior matmuls with the
 wire time — the schedule is visible in the compiled HLO
 (collective-permute-start ... interior dots ... collective-permute-done).
 
+Fused distributed sweeps (DESIGN.md §Planner): a chunk of ``T`` steps
+exchanges ONE ``T*r``-deep halo and then applies the T-fold self-correlated
+operator (``temporal.fuse_steps``) to the deep-haloed block — communication
+drops T-fold alongside the HBM traffic.  For Dirichlet-0 boundaries the
+fused operator is exact only at distance >= ``T*r`` from the *global*
+boundary, so edge strips are recomputed by ``T`` unfused steps over the
+already-exchanged deep halo with per-step clamping applied through a
+global-position mask (SPMD-uniform: every device runs the same program and
+the mask is the identity away from the global edge).
+
 The same machinery drives the production-mesh PDE example and the
 multi-pod dry-run for the paper's own workloads.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
-
-import numpy as np
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +34,13 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
+from repro.core import temporal
 from repro.core.engine import StencilEngine
 from repro.core.stencil_spec import StencilSpec
 
-__all__ = ["halo_exchange", "distributed_stencil_step", "make_distributed_stepper"]
+__all__ = ["halo_exchange", "distributed_stencil_step",
+           "distributed_fused_chunk", "make_distributed_stepper",
+           "make_fused_distributed_stepper", "DistributedStepper"]
 
 
 def _exchange_axis(block: jnp.ndarray, axis: int, r: int, mesh_axis: str,
@@ -73,45 +83,245 @@ def halo_exchange(block: jnp.ndarray, r: int, mesh_axes: dict[int, str],
     return out
 
 
+def _pad_local_axes(block: jnp.ndarray, width: int, spec_ndim: int,
+                    mesh_axes: dict[int, str], periodic: bool) -> jnp.ndarray:
+    """Boundary-pad the spatial axes that are NOT decomposed over the mesh.
+
+    An unsharded spatial axis lives entirely on every device, so its
+    boundary condition is applied locally: wrap for periodic, zeros for
+    Dirichlet-0 — the same semantics the exchange gives sharded axes.
+    """
+    lead = block.ndim - spec_ndim
+    pad = [(0, 0)] * block.ndim
+    local = False
+    for axis in range(lead, block.ndim):
+        if axis not in mesh_axes:
+            pad[axis] = (width, width)
+            local = True
+    if not local or width == 0:
+        return block
+    return jnp.pad(block, pad, mode="wrap" if periodic else "constant")
+
+
+def _haloed_input(block: jnp.ndarray, width: int, spec_ndim: int,
+                  mesh_axes: dict[int, str], periodic: bool) -> jnp.ndarray:
+    """Block extended by ``width`` on every spatial axis: local pads on
+    unsharded axes, neighbour exchange on sharded axes."""
+    out = _pad_local_axes(block, width, spec_ndim, mesh_axes, periodic)
+    return halo_exchange(out, width, mesh_axes, periodic)
+
+
+def _mask_outside_domain(s: jnp.ndarray, start_off: dict[int, int],
+                         axinfo: dict[int, tuple]) -> jnp.ndarray:
+    """Zero every position of ``s`` that lies outside the GLOBAL domain.
+
+    ``start_off[axis]`` is the global offset of s's local index 0 relative
+    to this device's owned-block start; ``axinfo[axis] = (shard_index,
+    n_owned, n_global)``.  Multiplying by the mask before each unfused step
+    is exactly per-step Dirichlet-0 clamping, expressed SPMD-uniformly (the
+    mask is all-ones on devices away from the global edge).
+    """
+    out = s
+    for axis, (idx, n_owned, n_global) in axinfo.items():
+        g0 = idx * n_owned + start_off[axis]
+        pos = g0 + jnp.arange(s.shape[axis])
+        mask = (pos >= 0) & (pos < n_global)
+        shape = [1] * s.ndim
+        shape[axis] = s.shape[axis]
+        out = out * mask.reshape(shape).astype(s.dtype)
+    return out
+
+
+def _axis_info(block: jnp.ndarray, spec_ndim: int,
+               mesh_axes: dict[int, str]) -> dict[int, tuple]:
+    lead = block.ndim - spec_ndim
+    info = {}
+    for axis in range(lead, block.ndim):
+        n_owned = block.shape[axis]
+        if axis in mesh_axes:
+            n_dev = axis_size(mesh_axes[axis])
+            idx = lax.axis_index(mesh_axes[axis])
+        else:
+            n_dev, idx = 1, 0
+        info[axis] = (idx, n_owned, n_owned * n_dev)
+    return info
+
+
+def _zero_boundary_strips(y: jnp.ndarray, haloed: jnp.ndarray, *, t: int,
+                          r: int, base_core: Callable, spec_ndim: int,
+                          mesh_axes: dict[int, str]) -> jnp.ndarray:
+    """Splice per-step-clamped edge strips over the fused Dirichlet-0 output.
+
+    Mirrors ``StencilEngine._zero_boundary_chunk`` on the deep-haloed local
+    block: each spatial axis/side re-evolves a ``3*t*r``-deep slab by ``t``
+    unfused valid steps, consuming the already-exchanged ``t*r`` halo on the
+    other axes and clamping out-of-domain positions to zero before every
+    step.  The resulting ``t*r``-wide strip is exact on EVERY device (away
+    from the global edge the mask is a no-op and the trapezoid reproduces
+    the fused values), so the splice needs no per-device branching.
+    """
+    nd = y.ndim
+    lead = nd - spec_ndim
+    w = t * r
+    axinfo = _axis_info(y, spec_ndim, mesh_axes)
+    for axis in range(lead, nd):
+        n_own = y.shape[axis]
+        h_ext = haloed.shape[axis]
+        for side in (0, 1):
+            sl = [slice(None)] * nd
+            sl[axis] = slice(0, 3 * w) if side == 0 else slice(h_ext - 3 * w, h_ext)
+            s = haloed[tuple(sl)]
+            start = {a: -w for a in axinfo}
+            start[axis] = -w if side == 0 else n_own - 2 * w
+            for _ in range(t):
+                s = base_core(_mask_outside_domain(s, start, axinfo))
+                for a in start:
+                    start[a] += r
+            osl = [slice(None)] * nd
+            osl[axis] = slice(0, w) if side == 0 else slice(n_own - w, n_own)
+            y = y.at[tuple(osl)].set(s)
+    return y
+
+
+def distributed_fused_chunk(block: jnp.ndarray, *, t: int,
+                            base_core: Callable, fused_core: Callable,
+                            spec: StencilSpec, mesh_axes: dict[int, str],
+                            periodic: bool = True,
+                            overlap: bool = True) -> jnp.ndarray:
+    """Advance a local block by ``t`` steps with ONE ``t*r`` halo exchange.
+
+    The fused operator (order ``t*r``) is applied to the deep-haloed block;
+    with ``overlap=True`` the halo-independent interior is expressed
+    separately so XLA hides the permute latency behind interior MXU work.
+    Dirichlet-0 edge strips are fixed up per-step-exactly (``t > 1`` only —
+    for a single step zero-extension IS per-step clamping).
+
+    Requires ``block.shape[axis] >= t * spec.order`` on every spatial axis.
+    """
+    r = spec.order
+    w = t * r
+    nd_lead = block.ndim - spec.ndim
+    for axis in range(nd_lead, block.ndim):
+        if block.shape[axis] < w:
+            raise ValueError(
+                f"local block extent {block.shape[axis]} on axis {axis} is "
+                f"smaller than the fused halo {w}; lower the fuse depth")
+
+    haloed = _haloed_input(block, w, spec.ndim, mesh_axes, periodic)
+    full = fused_core(haloed)
+
+    if overlap and all(block.shape[a] > 2 * w for a in mesh_axes):
+        # Interior: fused update from locally-available data only (sharded
+        # halos stripped; unsharded axes keep their cheap local pads), exact
+        # for points at distance >= t*r from the sharded local boundary.
+        inner_in = _pad_local_axes(block, w, spec.ndim, mesh_axes, periodic)
+        interior = fused_core(inner_in)  # shrinks SHARDED axes by 2*t*r
+        index = [slice(None)] * block.ndim
+        for axis in mesh_axes:
+            index[axis] = slice(w, block.shape[axis] - w)
+        full = full.at[tuple(index)].set(interior)
+
+    if not periodic and t > 1:
+        full = _zero_boundary_strips(full, haloed, t=t, r=r,
+                                     base_core=base_core,
+                                     spec_ndim=spec.ndim,
+                                     mesh_axes=mesh_axes)
+    return full
+
+
 def distributed_stencil_step(block: jnp.ndarray, *, engine: StencilEngine,
                              mesh_axes: dict[int, str], periodic: bool = True,
                              overlap: bool = True) -> jnp.ndarray:
     """One sharded stencil step on a local block (inside shard_map).
 
-    With ``overlap=True`` the interior update (independent of halos) is
-    expressed before the halo-dependent boundary strips so XLA can hide the
-    permute latency behind interior MXU work.
+    Single-step case of :func:`distributed_fused_chunk`; spatial axes left
+    out of ``mesh_axes`` get their boundary applied locally instead of the
+    (former) shape-mismatched splice.
     """
-    spec = engine.plan.spec
-    r = spec.order
-    core = engine.step_fn() if engine.plan.boundary == "valid" else None
-    if core is None:
+    if engine.plan.boundary != "valid":
         raise ValueError("distributed stepper needs a 'valid'-mode engine")
+    core = engine._core
+    return distributed_fused_chunk(block, t=1, base_core=core,
+                                   fused_core=core, spec=engine.plan.spec,
+                                   mesh_axes=mesh_axes, periodic=periodic,
+                                   overlap=overlap)
 
-    haloed = halo_exchange(block, r, mesh_axes, periodic)
 
-    if not overlap:
-        return core(haloed)
+class DistributedStepper:
+    """A compiled multi-device stepper plus its traceable building blocks.
 
-    # Interior: valid-mode update of the un-haloed block interior; exact for
-    # points at distance >= r from the local boundary.
-    interior = core(block)  # shape: block - 2r per decomposed axis
+    ``fn`` is the jitted sharded executable; ``global_fn`` is the un-jitted
+    shard_map'd function (traceable with ``jax.make_jaxpr`` — the planner's
+    acceptance test counts its ``ppermute`` equations); ``schedule`` is the
+    static chunk schedule one call advances through.
+    """
 
-    # Boundary strips: compute from the haloed block, then splice.
-    full = core(haloed)     # same shape as block
-    # Replace full's interior with the (identical, but halo-independent)
-    # interior computation; XLA CSEs if it wants, schedules early if it can.
-    nd_lead = block.ndim - spec.ndim
-    index = [slice(None)] * block.ndim
-    for axis in mesh_axes:
-        index[axis] = slice(r, block.shape[axis] - r)
-    for axis in range(nd_lead, block.ndim):
-        if axis not in mesh_axes:
-            # axis not decomposed: interior was computed valid on it too only
-            # if engine consumed halo there; engines here decompose all
-            # spatial axes, so this branch is for lead axes only.
-            pass
-    return full.at[tuple(index)].set(interior)
+    def __init__(self, fn: Callable, global_fn: Callable,
+                 schedule: tuple[int, ...], mesh: Mesh, pspec: P):
+        self.fn = fn
+        self.global_fn = global_fn
+        self.schedule = tuple(schedule)
+        self.mesh = mesh
+        self.pspec = pspec
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.fn(x)
+
+
+def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
+                                   grid_axes: Sequence[str], *,
+                                   schedule: Sequence[int],
+                                   option: str = "auto",
+                                   fused_option: str = "auto",
+                                   backend: str = "jnp",
+                                   boundary: str = "periodic",
+                                   block: tuple[int, ...] | None = None,
+                                   overlap: bool = True,
+                                   interpret: bool = True) -> DistributedStepper:
+    """Build the fused multi-device sweep: one ``t*r`` exchange per chunk.
+
+    ``schedule`` is the static list of chunk depths (e.g. ``[4, 4, 2]`` for
+    10 steps at fuse depth 4) — the planner's ``ExecutionPlan.fuse_schedule``
+    feeds straight in.  ``fused_option`` pins the cover of the deepest fused
+    operator (remainder chunks re-cover automatically).
+    """
+    if boundary not in ("periodic", "zero"):
+        raise ValueError("distributed sweeps need boundary='periodic'|'zero'")
+    schedule = tuple(int(t) for t in schedule)
+    if any(t < 1 for t in schedule):
+        raise ValueError(f"chunk depths must be >= 1, got {schedule}")
+    periodic = boundary == "periodic"
+
+    base = StencilEngine(spec, option=option, backend=backend, block=block,
+                         boundary="valid", interpret=interpret)
+    depth_max = max(schedule) if schedule else 1
+    cores: dict[int, Callable] = {1: base._core}
+    for t in sorted(set(schedule)):
+        if t > 1:
+            opt = fused_option if t == depth_max else "auto"
+            fused = StencilEngine(temporal.fuse_steps(spec, t), option=opt,
+                                  backend=backend, block=base.plan.block,
+                                  boundary="valid", interpret=interpret)
+            cores[t] = fused._core
+
+    grid_axes = tuple(grid_axes)
+    mesh_axes = {i: ax for i, ax in enumerate(grid_axes) if ax}
+    pspec = P(*[ax if ax else None for ax in grid_axes])
+
+    def local_fn(b):
+        for t in schedule:
+            b = distributed_fused_chunk(b, t=t, base_core=cores[1],
+                                        fused_core=cores[t], spec=spec,
+                                        mesh_axes=mesh_axes,
+                                        periodic=periodic, overlap=overlap)
+        return b
+
+    sharded = shard_map(local_fn, mesh=mesh, in_specs=pspec, out_specs=pspec,
+                        check=False)
+    fn = jax.jit(sharded,
+                 in_shardings=NamedSharding(mesh, pspec),
+                 out_shardings=NamedSharding(mesh, pspec))
+    return DistributedStepper(fn, sharded, schedule, mesh, pspec)
 
 
 def make_distributed_stepper(spec: StencilSpec, mesh: Mesh,
@@ -119,11 +329,13 @@ def make_distributed_stepper(spec: StencilSpec, mesh: Mesh,
                              option: str = "auto", backend: str = "jnp",
                              periodic: bool = True, overlap: bool = True,
                              steps: int = 1) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """Build a jit-ted multi-device stencil stepper.
+    """Build a jit-ted multi-device stencil stepper (width-r exchange/step).
 
-    ``grid_axes``: mesh axis name for each spatial array axis (use None-like
-    '' to leave an axis unsharded). The returned fn maps a global array
-    sharded as P(*grid_axes) to the evolved global array.
+    ``grid_axes``: mesh axis name for each spatial array axis (use '' to
+    leave an axis unsharded — its boundary is then applied locally). The
+    returned fn maps a global array sharded as P(*grid_axes) to the evolved
+    global array.  Kept as the simple per-step API; fused multi-step sweeps
+    go through :func:`make_fused_distributed_stepper` / ``repro.api``.
     """
     engine = StencilEngine(spec, option=option, backend=backend, boundary="valid")
     mesh_axes = {i: ax for i, ax in enumerate(grid_axes) if ax}

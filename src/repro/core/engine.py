@@ -5,6 +5,15 @@ as future work (§5.2); ``choose_cover`` supplies one — it scores every legal
 cover by modelled MXU/VPU op count at the engine's block size and picks the
 cheapest, which reproduces the paper's measured preferences (parallel for
 r=1 stars and all boxes, orthogonal for high-order stars).
+
+As of the unified plan/compile API (DESIGN.md §Planner) the engine is a
+thin compatibility wrapper: the full decision record lives in
+:class:`repro.core.planner.ExecutionPlan` (cover x backend x block x fuse
+schedule x halo strategy, each with its modelled roofline cost), and
+backends are pluggable through :func:`register_backend` instead of an
+if/elif chain — ``jnp`` / ``separable`` / ``codegen`` / ``pallas`` are
+ordinary registry entries and third-party kernels can register alongside
+them.
 """
 from __future__ import annotations
 
@@ -24,12 +33,29 @@ from repro.core import temporal
 from repro.core.stencil_spec import StencilSpec
 
 __all__ = ["StencilPlan", "StencilEngine", "choose_cover", "legal_covers",
-           "default_block"]
+           "default_block", "max_fuse_depth_for", "Backend",
+           "register_backend", "get_backend", "backend_names"]
 
 
 def default_block(spec: StencilSpec) -> tuple[int, ...]:
     """The engine's default output tile for a spec's dimensionality."""
     return (128, 128) if spec.ndim == 2 else (8, 128, 128)[:spec.ndim]
+
+
+def max_fuse_depth_for(boundary: str, order: int, n_min: int) -> int:
+    """Largest legal fused-chunk depth for a spatial extent and boundary.
+
+    The single source of the feasibility formulas (the engine's sweep cap
+    AND the planner's search cap — a depth the planner picks must never be
+    one the execution layer rejects): 'periodic' wrap-padding needs halo
+    <= extent; 'zero' strip splicing needs the two ``order*T`` strips to
+    fit; 'valid' needs a non-empty output after the ``2*order*T`` shrink.
+    """
+    if boundary == "periodic":
+        return max(1, n_min // order)
+    if boundary == "zero":
+        return max(1, n_min // (2 * order))
+    return max(1, (n_min - 1) // (2 * order))
 
 
 def legal_covers(spec: StencilSpec) -> list[str]:
@@ -64,13 +90,103 @@ class StencilPlan:
     spec: StencilSpec
     option: str
     cover: cl.LineCover
-    backend: str          # "jnp" | "separable" | "pallas" | "codegen"
+    backend: str          # any registered backend name
     block: tuple[int, ...]
     unroll: tuple[int, ...]
     boundary: str         # "valid" | "zero" | "periodic"
 
     def op_count(self, n: int | None = None) -> int:
         return cl.cover_outer_product_count(self.cover, n or self.block[0])
+
+
+# ---------------------------------------------------------------------------
+# Backend registry — the former _build_core if/elif as pluggable entries.
+# A backend builder maps a StencilPlan to a VALID-mode core callable; the
+# halo layer lifts it to the requested boundary.  ``mxu_efficiency`` is the
+# modelled fraction of peak MXU throughput the backend sustains (used by the
+# planner's roofline scoring), and ``supports`` gates the backend per spec.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    builder: Callable[..., Callable[[jnp.ndarray], jnp.ndarray]]
+    mxu_efficiency: float = 0.7
+    supports: Callable[[StencilSpec], bool] = lambda spec: True
+    uses_cover: bool = True   # False: execution ignores the line cover
+    #                           (e.g. SVD-separable), so the planner scores
+    #                           it once per fuse depth, not once per cover
+    flops_model: Callable[[StencilSpec, tuple[int, ...]], int] | None = None
+    #                           None: the planner prices the backend by the
+    #                           cover's mxu_flops; cover-free backends
+    #                           supply their own (spec, block) -> flops
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str, builder: Callable, *,
+                     mxu_efficiency: float = 0.7,
+                     supports: Callable[[StencilSpec], bool] | None = None,
+                     uses_cover: bool = True,
+                     flops_model: Callable | None = None,
+                     overwrite: bool = False) -> Backend:
+    """Register a stencil execution backend.
+
+    ``builder(plan, **options) -> core`` must return a valid-mode update
+    (shrinks each spatial axis by ``2 * plan.spec.order``); ``options``
+    currently carries ``interpret`` for kernel backends.  Registration is
+    the extension point third-party kernels use — the engine and the
+    planner both dispatch through this table.
+    """
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    be = Backend(name=name, builder=builder,
+                 mxu_efficiency=float(mxu_efficiency),
+                 supports=supports or (lambda spec: True),
+                 uses_cover=uses_cover, flops_model=flops_model)
+    _BACKENDS[name] = be
+    return be
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{sorted(_BACKENDS)}")
+    return _BACKENDS[name]
+
+
+def backend_names() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def _jnp_builder(plan: StencilPlan, **_opts) -> Callable:
+    return functools.partial(mx.matrixized_apply, spec=plan.spec,
+                             cover=plan.cover)
+
+
+def _separable_builder(plan: StencilPlan, **_opts) -> Callable:
+    return functools.partial(mx.separable_apply, spec=plan.spec)
+
+
+def _codegen_builder(plan: StencilPlan, **_opts) -> Callable:
+    from repro.core.codegen import generate_update
+    return generate_update(plan).fn
+
+
+def _pallas_builder(plan: StencilPlan, *, interpret: bool = True,
+                    **_opts) -> Callable:
+    from repro.kernels import ops as kops
+    return kops.pallas_backend_core(plan, interpret=interpret)
+
+
+register_backend("jnp", _jnp_builder, mxu_efficiency=0.7)
+register_backend("separable", _separable_builder, mxu_efficiency=0.75,
+                 supports=lambda spec: spec.ndim == 2, uses_cover=False,
+                 flops_model=mx.separable_mxu_flops)
+register_backend("codegen", _codegen_builder, mxu_efficiency=0.8)
+register_backend("pallas", _pallas_builder, mxu_efficiency=0.9)
 
 
 class StencilEngine:
@@ -80,6 +196,11 @@ class StencilEngine:
         eng = StencilEngine(spec, option="auto", backend="pallas")
         y = eng(x)            # single step
         y = eng.run(x, steps=100)
+
+    For the full declarative pipeline (decision record with modelled costs,
+    JSON-serializable plans, distributed fused sweeps) use
+    ``repro.api.plan`` / ``repro.api.compile``; the engine remains the
+    execution substrate those build on.
     """
 
     def __init__(self, spec: StencilSpec, option: str = "auto",
@@ -104,27 +225,22 @@ class StencilEngine:
                                       boundary)
         self._fused_engines: dict[int, "StencilEngine"] = {}
 
+    @classmethod
+    def from_execution_plan(cls, eplan, interpret: bool = True) -> "StencilEngine":
+        """Compatibility constructor from a planner ``ExecutionPlan``."""
+        return cls(eplan.spec, option=eplan.base_option, backend=eplan.backend,
+                   block=eplan.block, unroll=eplan.unroll,
+                   boundary=eplan.problem["boundary"], interpret=interpret)
+
     # -- construction -------------------------------------------------------
     def _build_core(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
-        """The valid-mode update; boundary handling is layered on by
-        :func:`repro.core.halo.wrap_boundary`."""
-        plan = self.plan
-        if plan.backend == "jnp":
-            core = functools.partial(mx.matrixized_apply, spec=plan.spec,
-                                     cover=plan.cover)
-        elif plan.backend == "separable":
-            core = functools.partial(mx.separable_apply, spec=plan.spec)
-        elif plan.backend == "codegen":
-            from repro.core.codegen import generate_update
-            core = generate_update(plan).fn
-        elif plan.backend == "pallas":
-            from repro.kernels import ops as kops
-            core = functools.partial(kops.stencil_matrixized, spec=plan.spec,
-                                     cover=plan.cover, block=plan.block,
-                                     interpret=self.interpret)
-        else:
-            raise ValueError(f"unknown backend {plan.backend!r}")
-        return core
+        """The valid-mode update via the backend registry; boundary handling
+        is layered on by :func:`repro.core.halo.wrap_boundary`."""
+        backend = get_backend(self.plan.backend)
+        if not backend.supports(self.plan.spec):
+            raise ValueError(f"backend {backend.name!r} does not support "
+                             f"{self.plan.spec.describe()}")
+        return backend.builder(self.plan, interpret=self.interpret)
 
     # -- execution -----------------------------------------------------------
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -141,6 +257,22 @@ class StencilEngine:
         return jax.lax.fori_loop(0, steps, lambda _, a: fn(a), x)
 
     # -- fused temporal sweep (paper §6 made executable) ---------------------
+    def _resolve_depth(self, steps: int, fuse: int | str) -> int:
+        # fuse="auto" here uses temporal.choose_fuse_depth — DELIBERATELY a
+        # simpler model than the planner's (block-level compute/traffic
+        # only; no grid, backend efficiency, ICI, or strip surcharge,
+        # none of which the engine has context for).  The full model and
+        # decision record live in repro.api.plan; a planned depth is
+        # honoured exactly because compile() passes it as an explicit
+        # schedule and never re-enters this chooser.
+        if fuse == "auto":
+            return temporal.choose_fuse_depth(
+                self.plan.spec, steps, self.plan.block).depth
+        depth = int(fuse)
+        if depth < 1:
+            raise ValueError(f"fuse depth must be >= 1, got {fuse}")
+        return depth
+
     def sweep(self, x: jnp.ndarray, steps: int,
               fuse: int | str = "auto") -> jnp.ndarray:
         """Advance ``steps`` applications via fused multi-step sweeps.
@@ -163,45 +295,67 @@ class StencilEngine:
             raise ValueError("steps >= 0")
         if steps == 0:
             return x
-        if fuse == "auto":
-            depth = temporal.choose_fuse_depth(
-                self.plan.spec, steps, self.plan.block).depth
-        else:
-            depth = int(fuse)
-            if depth < 1:
-                raise ValueError(f"fuse depth must be >= 1, got {fuse}")
-        depth = min(depth, steps, self._max_fuse_depth(x))
+        depth = self._resolve_depth(steps, fuse)
+        grid = x.shape[x.ndim - self.plan.spec.ndim:]
+        depth = min(depth, steps, self.max_fuse_depth(grid))
         for t in temporal.fuse_schedule(steps, depth):
             x = self._apply_chunk(x, t)
         return x
 
-    def sweep_fn(self, steps: int,
-                 fuse: int | str = "auto") -> Callable[[jnp.ndarray], jnp.ndarray]:
-        """jit-friendly closure over :meth:`sweep` with static step count."""
-        return functools.partial(self.sweep, steps=steps, fuse=fuse)
+    def sweep_fn(self, steps: int, fuse: int | str = "auto",
+                 grid: tuple[int, ...] | None = None
+                 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """jit-safe closure over :meth:`sweep` with a static step count.
 
-    def _max_fuse_depth(self, x: jnp.ndarray) -> int:
-        """Largest legal chunk depth for this input shape and boundary.
-
-        'periodic' wrap-padding needs halo <= extent; 'zero' strip splicing
-        needs the two ``order*T`` strips to fit; 'valid' needs a non-empty
-        output after the chunk's ``2*order*T`` shrink.
+        The fuse depth (``fuse="auto"`` included) is resolved HERE, at
+        closure-build time — not inside traced code — so ``jax.jit`` of the
+        result traces a fixed chunk schedule and compiles exactly once per
+        input shape.  Passing ``grid`` (the spatial extents) additionally
+        freezes the shape-capped schedule and pre-builds the fused engines
+        eagerly, so the first jitted call does no planning work at all.
         """
-        r = self.plan.spec.order
-        nd = self.plan.spec.ndim
-        n_min = min(x.shape[x.ndim - nd:])
-        if self.plan.boundary == "periodic":
-            return max(1, n_min // r)
-        if self.plan.boundary == "zero":
-            return max(1, n_min // (2 * r))
-        return max(1, (n_min - 1) // (2 * r))
+        if steps < 0:
+            raise ValueError("steps >= 0")
+        depth = self._resolve_depth(steps, fuse) if steps else 1
+        schedule: list[int] | None = None
+        if grid is not None:
+            cap = min(depth, max(steps, 1), self.max_fuse_depth(tuple(grid)))
+            schedule = temporal.fuse_schedule(steps, cap)
+            for t in set(schedule):
+                if t > 1:
+                    self.fused_engine(t)
 
-    def _fused_engine(self, t: int) -> "StencilEngine":
-        """Engine for the fused t-step operator (cover + kernel re-planned)."""
+        def fn(x: jnp.ndarray) -> jnp.ndarray:
+            if steps == 0:
+                return x
+            sched = schedule
+            if sched is None:
+                g = x.shape[x.ndim - self.plan.spec.ndim:]
+                sched = temporal.fuse_schedule(
+                    steps, min(depth, steps, self.max_fuse_depth(g)))
+            for t in sched:
+                x = self._apply_chunk(x, t)
+            return x
+
+        return fn
+
+    def max_fuse_depth(self, grid: tuple[int, ...]) -> int:
+        """Largest legal chunk depth for this spatial shape and boundary."""
+        return max_fuse_depth_for(self.plan.boundary, self.plan.spec.order,
+                                  min(grid))
+
+    def fused_engine(self, t: int, option: str = "auto") -> "StencilEngine":
+        """Engine for the fused t-step operator (cover + kernel re-planned).
+
+        A cached engine is reused only if its cover is compatible with the
+        request ('auto' accepts any; a pinned option rebuilds on mismatch).
+        """
         eng = self._fused_engines.get(t)
+        if eng is not None and option not in ("auto", eng.plan.option):
+            eng = None
         if eng is None:
             eng = StencilEngine(temporal.fuse_steps(self.plan.spec, t),
-                                option="auto", backend=self.plan.backend,
+                                option=option, backend=self.plan.backend,
                                 block=self.plan.block,
                                 boundary=self.plan.boundary,
                                 interpret=self.interpret)
@@ -211,7 +365,7 @@ class StencilEngine:
     def _apply_chunk(self, x: jnp.ndarray, t: int) -> jnp.ndarray:
         if t == 1:
             return self._fn(x)
-        fused = self._fused_engine(t)
+        fused = self.fused_engine(t)
         if self.plan.boundary == "zero":
             return self._zero_boundary_chunk(x, t, fused)
         return fused._fn(x)
@@ -237,7 +391,7 @@ class StencilEngine:
             axis = lead + a
             n_a = x.shape[axis]
             for side in (0, 1):
-                w0 = 2 * rt  # guaranteed <= n_a by _max_fuse_depth
+                w0 = 2 * rt  # guaranteed <= n_a by max_fuse_depth
                 sl = [slice(None)] * x.ndim
                 sl[axis] = slice(0, w0) if side == 0 else slice(n_a - w0, n_a)
                 s = x[tuple(sl)]

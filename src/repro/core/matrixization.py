@@ -32,13 +32,32 @@ from repro.core.stencil_spec import StencilSpec
 
 __all__ = [
     "toeplitz_band",
+    "toeplitz_band_np",
     "line_to_gather_band",
     "matrixized_apply",
     "separable_factors",
     "separable_apply",
     "matmul_count",
     "mxu_flops",
+    "separable_mxu_flops",
+    "block_hbm_bytes",
 ]
+
+
+def toeplitz_band_np(band: np.ndarray, n_out: int) -> np.ndarray:
+    """Numpy-side banded Toeplitz operator (n_out, n_out + len(band) - 1).
+
+    Kernel PLANNING must stay in numpy: it runs inside jit traces (the
+    Pallas call site builds its plan per input shape), where a jnp
+    intermediate would be a tracer and poison any ``np.asarray`` on it.
+    """
+    band = np.asarray(band)
+    w = band.shape[0]
+    t = np.zeros((n_out, n_out + w - 1), dtype=np.float64)
+    rows = np.arange(n_out)
+    for s in range(w):
+        t[rows, rows + s] = band[s]
+    return t
 
 
 def toeplitz_band(band: np.ndarray, n_out: int, dtype=jnp.float32) -> jnp.ndarray:
@@ -47,13 +66,7 @@ def toeplitz_band(band: np.ndarray, n_out: int, dtype=jnp.float32) -> jnp.ndarra
     ``T[k, k+s] = band[s]`` — contracting T against a haloed slab applies
     the 1-D gather stencil ``band`` along the contracted axis.
     """
-    band = np.asarray(band)
-    w = band.shape[0]
-    t = np.zeros((n_out, n_out + w - 1), dtype=np.float64)
-    rows = np.arange(n_out)
-    for s in range(w):
-        t[rows, rows + s] = band[s]
-    return jnp.asarray(t, dtype=dtype)
+    return jnp.asarray(toeplitz_band_np(band, n_out), dtype=dtype)
 
 
 def line_to_gather_band(line: CoefficientLine, spec: StencilSpec):
@@ -206,3 +219,29 @@ def mxu_flops(cover: LineCover, block: tuple[int, ...]) -> int:
         rest = int(np.prod([b for a, b in enumerate(block) if a != ax]))
         total += 2 * n * (n + 2 * r) * rest
     return total
+
+
+def separable_mxu_flops(spec: StencilSpec, block: tuple[int, ...]) -> int:
+    """MXU flops for the SVD-separable path on one 2-D output block.
+
+    Each rank-1 factor costs two slab matmuls: ``T_u @ A`` over the haloed
+    slab and the result against ``T_v^T`` (see :func:`separable_apply`).
+    """
+    r = spec.order
+    n_i, n_j = block[-2], block[-1]
+    rank = len(separable_factors(spec))
+    per_factor = (2 * n_i * (n_i + 2 * r) * (n_j + 2 * r)
+                  + 2 * n_i * (n_j + 2 * r) * n_j)
+    return rank * per_factor
+
+
+def block_hbm_bytes(block: tuple[int, ...], halo_width: int,
+                    dtype_bytes: int = 4) -> float:
+    """HBM bytes to update one block: haloed read + write-back.
+
+    The shared traffic term of the fuse-depth chooser and the planner's
+    roofline model (halo_width = fused order ``T*r``).
+    """
+    read = float(np.prod([b + 2 * halo_width for b in block]))
+    write = float(np.prod(block))
+    return dtype_bytes * (read + write)

@@ -1,0 +1,595 @@
+"""Declarative planning layer: ``StencilProblem -> plan() -> ExecutionPlan
+-> compile()``.
+
+The paper's §5.2 leaves "a performance model to determine the optimal
+option" as future work.  This module IS that model, made first-class: one
+cost function scores every enumerated (cover option x backend x fuse depth)
+candidate with roofline terms (MXU compute, HBM traffic, ICI halo traffic),
+and the winning decisions are frozen into an :class:`ExecutionPlan` — a
+JSON-(de)serializable artifact that records every choice WITH its modelled
+cost, renders the full cost table via :meth:`ExecutionPlan.explain`, and
+compiles to a jit-ready executable with :func:`compile_plan`.
+
+Decisions recorded per plan:
+  * ``option``       — coefficient-line cover of the (fused) operator
+  * ``base_option``  — cover of the unfused operator (remainder chunks,
+    Dirichlet-0 strip fixups)
+  * ``backend``      — an entry of the engine's backend registry
+  * ``block``        — output tile (the paper's §4.3 in-core block)
+  * ``fuse_depth`` / ``fuse_schedule`` — temporal chunking (paper §6)
+  * ``halo_strategy`` — "none" (valid) | "pad" (single device) |
+    "exchange" (mesh: ONE ``T*r``-deep exchange per fused chunk)
+  * ``sharding``     — mesh shape/axes + grid axis mapping
+
+Cost model (per fused sweep over the device-local grid, divided by the
+chunk depth for a per-original-step figure):
+  * t_compute = mxu_flops(fused cover, block) * n_blocks
+                / (peak_flops * backend.mxu_efficiency)
+                [+ the modelled Dirichlet-0 strip recompute surcharge]
+  * t_traffic = block_hbm_bytes(block, T*r) * n_blocks / hbm_bw
+  * t_comm    = 2 * T*r * (face area) * dtype_bytes / ici_bw  per sharded
+                axis (one deep exchange per chunk)
+The chosen candidate minimizes max(t_compute, t_traffic, t_comm) / T; ties
+break toward the higher-efficiency backend, then lexicographically, so
+plans are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import coefficient_lines as cl
+from repro.core import halo
+from repro.core import matrixization as mx
+from repro.core import temporal
+from repro.core.engine import (StencilEngine, backend_names, choose_cover,
+                               default_block, get_backend, legal_covers,
+                               max_fuse_depth_for)
+from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
+
+__all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
+           "CompiledStencil", "plan", "compile_plan", "candidate_cost",
+           "PLAN_VERSION"]
+
+PLAN_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Problem statement
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StencilProblem:
+    """What to solve, declaratively — the planner decides how.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) and ``grid_axes`` (one mesh-axis name
+    per spatial axis, '' for unsharded) are set together or not at all.
+    """
+
+    spec: StencilSpec
+    grid: tuple[int, ...]
+    dtype: str = "float32"
+    boundary: str = "periodic"
+    steps: int = 1
+    mesh: Any | None = None
+    grid_axes: tuple[str, ...] | None = None
+
+    def __post_init__(self):
+        halo.check_boundary(self.boundary)
+        object.__setattr__(self, "grid", tuple(int(n) for n in self.grid))
+        if len(self.grid) != self.spec.ndim:
+            raise ValueError(f"grid {self.grid} has {len(self.grid)} axes for "
+                             f"a {self.spec.ndim}-D spec")
+        if self.steps < 0:
+            raise ValueError("steps >= 0")
+        if (self.mesh is None) != (self.grid_axes is None):
+            raise ValueError("mesh and grid_axes must be given together")
+        if self.grid_axes is not None:
+            object.__setattr__(self, "grid_axes", tuple(self.grid_axes))
+            if len(self.grid_axes) != self.spec.ndim:
+                raise ValueError("grid_axes needs one entry per spatial axis")
+            if self.boundary == "valid":
+                raise ValueError("distributed problems need a "
+                                 "shape-preserving boundary")
+        jnp.dtype(self.dtype)  # validate
+
+    @property
+    def dtype_bytes(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    def mesh_axis_sizes(self) -> dict[str, int]:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def local_grid(self) -> tuple[int, ...]:
+        """Per-device spatial extents (== grid on a single device)."""
+        if self.mesh is None:
+            return self.grid
+        sizes = self.mesh_axis_sizes()
+        out = []
+        for n, ax in zip(self.grid, self.grid_axes):
+            d = sizes.get(ax, 1) if ax else 1
+            if n % d:
+                raise ValueError(f"grid extent {n} not divisible by mesh "
+                                 f"axis {ax!r} of size {d}")
+            out.append(n // d)
+        return tuple(out)
+
+    def to_dict(self) -> dict:
+        return {
+            "spec": {"gather_coeffs": np.asarray(self.spec.gather_coeffs).tolist(),
+                     "shape": self.spec.shape},
+            "grid": list(self.grid),
+            "dtype": self.dtype,
+            "boundary": self.boundary,
+            "steps": int(self.steps),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Cost records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateCost:
+    """Roofline model of one (fuse depth, cover, backend) candidate."""
+    depth: int
+    option: str
+    backend: str
+    mxu_flops: float        # per fused sweep over the local grid
+    hbm_bytes: float        # per fused sweep over the local grid
+    ici_bytes: float        # per fused chunk (deep halo exchange)
+    t_compute: float        # seconds per sweep
+    t_traffic: float
+    t_comm: float
+    t_per_step: float       # max(compute, traffic, comm) / depth
+
+
+def _n_blocks(local_grid: Sequence[int], block: Sequence[int]) -> int:
+    return int(np.prod([math.ceil(g / b) for g, b in zip(local_grid, block)]))
+
+
+def _backend_efficiency(name: str) -> float:
+    """Modelled efficiency, tolerant of plans shipped from a process that
+    had extra backends registered (explain() must not require them)."""
+    try:
+        return get_backend(name).mxu_efficiency
+    except ValueError:
+        return 0.0
+
+
+def _selection_key(c: CandidateCost):
+    """Deterministic total order: min bound cost; on a bound tie the
+    least total resource use (compute+traffic+comm all still cost energy
+    and contend off the critical path), then the higher-efficiency
+    backend, then lexicographic."""
+    return (c.t_per_step, (c.t_compute + c.t_traffic + c.t_comm) / c.depth,
+            -_backend_efficiency(c.backend),
+            c.depth, c.option, c.backend)
+
+
+def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
+               option: str, cover: cl.LineCover, backend: str,
+               block: tuple[int, ...], local_grid: tuple[int, ...],
+               sharded_axes: Sequence[int], boundary: str,
+               base_flops: float, dtype_bytes: int, hw) -> CandidateCost:
+    be = get_backend(backend)
+    if be.flops_model is not None:
+        flops_block = be.flops_model(fspec, block)
+    else:
+        flops_block = mx.mxu_flops(cover, block)
+    nb = _n_blocks(local_grid, block)
+    flops = float(flops_block) * nb
+    if boundary == "zero" and depth > 1:
+        # Dirichlet-0 strip fixups: 2 strips per axis, each re-evolved by
+        # `depth` unfused steps over a 3*T*r-deep slab (see
+        # distributed.distributed_fused_chunk) — modelled as that fraction
+        # of `depth` full unfused sweeps.
+        frac = min(1.0, 3 * depth * spec.order / min(local_grid))
+        flops += 2 * spec.ndim * depth * frac * base_flops
+    bytes_hbm = mx.block_hbm_bytes(block, fspec.order, dtype_bytes) * nb
+    ici = 0.0
+    for a in sharded_axes:
+        face = float(np.prod([g for i, g in enumerate(local_grid) if i != a]))
+        ici += 2 * depth * spec.order * face * dtype_bytes
+    t_compute = flops / (hw.peak_flops_bf16 * be.mxu_efficiency)
+    t_traffic = bytes_hbm / hw.hbm_bw
+    t_comm = ici / hw.ici_bw if ici else 0.0
+    return CandidateCost(depth=depth, option=option, backend=backend,
+                         mxu_flops=flops, hbm_bytes=bytes_hbm, ici_bytes=ici,
+                         t_compute=t_compute, t_traffic=t_traffic,
+                         t_comm=t_comm,
+                         t_per_step=max(t_compute, t_traffic, t_comm) / depth)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan — the frozen decision record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Every decision the planner made, with its modelled cost.
+
+    Frozen and JSON-round-trippable by construction: all fields are
+    JSON-native containers (the spec lives inside ``problem`` as a nested
+    coefficient list), so ``from_json(to_json(p)) == p`` under dataclass
+    equality.  The plan is the unit of reproducibility — ship it, diff it,
+    golden-test it (``make plan-report``).
+    """
+
+    version: int
+    problem: dict
+    hw: dict
+    option: str            # cover of the fused operator at fuse_depth
+    base_option: str       # cover of the unfused operator
+    backend: str
+    block: tuple[int, ...]
+    unroll: tuple[int, ...]
+    fuse_depth: int
+    fuse_schedule: tuple[int, ...]
+    halo_strategy: str     # "none" | "pad" | "exchange"
+    halo_width: int
+    sharding: dict | None
+    candidates: tuple[CandidateCost, ...]
+
+    # -- reconstruction ----------------------------------------------------
+    @property
+    def spec(self) -> StencilSpec:
+        s = self.problem["spec"]
+        return from_gather_coeffs(np.asarray(s["gather_coeffs"]), s["shape"])
+
+    @property
+    def steps(self) -> int:
+        return int(self.problem["steps"])
+
+    @property
+    def boundary(self) -> str:
+        return self.problem["boundary"]
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        return tuple(self.problem["grid"])
+
+    def chosen(self) -> CandidateCost:
+        for c in self.candidates:
+            if (c.depth, c.option, c.backend) == (self.fuse_depth, self.option,
+                                                  self.backend):
+                return c
+        raise KeyError("chosen candidate missing from the cost table")
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self, indent: int | None = None) -> str:
+        d = dataclasses.asdict(self)
+        d["block"] = list(self.block)
+        d["unroll"] = list(self.unroll)
+        d["fuse_schedule"] = list(self.fuse_schedule)
+        d["candidates"] = [dataclasses.asdict(c) for c in self.candidates]
+        return json.dumps(d, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExecutionPlan":
+        d = json.loads(text)
+        if d.get("version") != PLAN_VERSION:
+            raise ValueError(f"plan version {d.get('version')!r} does not "
+                             f"match this code's PLAN_VERSION={PLAN_VERSION};"
+                             f" re-plan the problem")
+        d["block"] = tuple(d["block"])
+        d["unroll"] = tuple(d["unroll"])
+        d["fuse_schedule"] = tuple(d["fuse_schedule"])
+        d["candidates"] = tuple(CandidateCost(**c) for c in d["candidates"])
+        return cls(**d)
+
+    # -- reporting ---------------------------------------------------------
+    def schedule_str(self) -> str:
+        if not self.fuse_schedule:
+            return "[]"
+        full = sum(1 for t in self.fuse_schedule if t == self.fuse_depth)
+        rem = [t for t in self.fuse_schedule if t != self.fuse_depth]
+        s = f"{self.fuse_depth}x{full}"
+        if rem:
+            s += "+" + "+".join(str(t) for t in rem)
+        return s
+
+    def explain(self, top: int = 8) -> str:
+        """Human-readable decision record with the modelled cost table."""
+        p = self.problem
+        spec = self.spec
+        sh = self.sharding
+        mesh_s = ("-" if sh is None else
+                  "x".join(str(n) for n in sh["mesh_shape"]) + "("
+                  + ",".join(a if a else "." for a in sh["grid_axes"]) + ")")
+        ch = self.chosen()
+        lines = [
+            f"ExecutionPlan v{self.version}: {spec.describe()} | "
+            f"grid={tuple(p['grid'])} {p['dtype']} | boundary={p['boundary']} "
+            f"| steps={p['steps']} | mesh={mesh_s}",
+            f"hw {self.hw['name']}: {self.hw['peak_flops_bf16'] / 1e12:.0f} "
+            f"TFLOP/s peak, {self.hw['hbm_bw'] / 1e9:.0f} GB/s HBM, "
+            f"{self.hw['ici_bw'] / 1e9:.0f} GB/s ICI",
+            f"chosen: backend={self.backend} cover={self.option} "
+            f"(base {self.base_option}) block={self.block} "
+            f"fuse={self.fuse_depth} schedule={self.schedule_str()} "
+            f"halo={self.halo_strategy} width={self.halo_width}",
+            f"modelled/step: compute {ch.t_compute / ch.depth:.3e}s, "
+            f"traffic {ch.t_traffic / ch.depth:.3e}s, "
+            f"comm {ch.t_comm / ch.depth:.3e}s -> {ch.t_per_step:.3e}s",
+            "  rank depth cover       backend     t_compute   t_traffic   "
+            "t_comm      t/step",
+        ]
+        ranked = sorted(self.candidates, key=_selection_key)
+        for i, c in enumerate(ranked[:top]):
+            mark = "  <- chosen" if (c.depth, c.option, c.backend) == (
+                self.fuse_depth, self.option, self.backend) else ""
+            lines.append(
+                f"  {i + 1:4d} {c.depth:5d} {c.option:<11s} {c.backend:<11s} "
+                f"{c.t_compute:.3e}   {c.t_traffic:.3e}   {c.t_comm:.3e}   "
+                f"{c.t_per_step:.3e}{mark}")
+        if len(ranked) > top:
+            lines.append(f"  ... {len(ranked) - top} more candidates")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# plan()
+# ---------------------------------------------------------------------------
+
+def _hw_dict(hw) -> dict:
+    return {"name": hw.name, "peak_flops_bf16": float(hw.peak_flops_bf16),
+            "hbm_bw": float(hw.hbm_bw), "ici_bw": float(hw.ici_bw),
+            "hbm_bytes": float(hw.hbm_bytes)}
+
+
+def _default_hw():
+    from repro.launch.mesh import TPU_V5E
+    return TPU_V5E
+
+
+def _candidate_context(problem: StencilProblem,
+                       block: tuple[int, ...] | None,
+                       option: str | None) -> tuple:
+    """Shared plan()/candidate_cost() setup, so the two cost paths cannot
+    drift: (block, local_grid, sharded_axes, base_option, base_flops)."""
+    spec = problem.spec
+    local_grid = problem.local_grid()
+    if block is None:
+        block = tuple(min(b, g) for b, g in
+                      zip(default_block(spec), local_grid))
+    block = tuple(int(b) for b in block)
+    sharded_axes = []
+    if problem.grid_axes is not None:
+        sizes = problem.mesh_axis_sizes()
+        sharded_axes = [i for i, ax in enumerate(problem.grid_axes)
+                        if ax and sizes.get(ax, 1) > 1]
+    base_option, base_cover = ((option, cl.make_cover(spec, option))
+                               if option else choose_cover(spec, block[0]))
+    base_flops = float(mx.mxu_flops(base_cover, block)) * _n_blocks(local_grid,
+                                                                    block)
+    return block, local_grid, sharded_axes, base_option, base_flops
+
+
+def _feasible_depth(boundary: str, r: int, n_min: int, steps: int) -> int:
+    """Hard feasibility cap (shape + boundary + step count) — shared with
+    the engine via :func:`repro.core.engine.max_fuse_depth_for` so a
+    planned depth is never one the execution layer rejects."""
+    if steps <= 1:
+        return 1
+    return max(1, min(steps, max_fuse_depth_for(boundary, max(r, 1), n_min)))
+
+
+def plan(problem: StencilProblem, hw=None, *,
+         backends: Sequence[str] | None = None,
+         option: str | None = None,
+         fuse: int | None = None,
+         block: tuple[int, ...] | None = None,
+         max_depth: int = 4) -> ExecutionPlan:
+    """Enumerate (cover x backend x fuse) candidates, pick the min-cost one.
+
+    ``option`` / ``backends`` / ``fuse`` pin a decision instead of searching
+    it (the pinned value still gets its cost modelled and recorded).  A
+    pinned ``option`` constrains the UNFUSED operator; fused operators are
+    re-covered per depth, exactly as the engine's sweep does.
+    """
+    if hw is None:
+        hw = _default_hw()
+    spec = problem.spec
+    r = spec.order
+
+    names = list(backends) if backends is not None else backend_names()
+    for nm in names:
+        get_backend(nm)  # fail fast on unknown names
+    if option is not None and option not in cl.COVER_OPTIONS:
+        raise ValueError(f"unknown cover option {option!r}; choose from "
+                         f"{list(cl.COVER_OPTIONS)}")
+
+    block, local_grid, sharded_axes, base_option, base_flops = \
+        _candidate_context(problem, block, option)
+
+    feasible = _feasible_depth(problem.boundary, r, min(local_grid),
+                               problem.steps)
+    if fuse is not None:
+        # a pin is checked against FEASIBILITY only — max_depth is a
+        # search-enumeration width, not a legality bound
+        if fuse < 1:
+            raise ValueError(f"fuse depth must be >= 1, got {fuse}")
+        if fuse > max(feasible, 1):
+            raise ValueError(f"fuse depth {fuse} exceeds the shape/boundary "
+                             f"cap {feasible} for grid {local_grid}")
+        depths = [int(fuse)]
+    else:
+        depths = list(range(1, min(feasible, max_depth) + 1))
+
+    fused_specs: dict[int, StencilSpec] = {1: spec}
+    cands: list[CandidateCost] = []
+    for t in depths:
+        fspec = fused_specs.get(t)
+        if fspec is None:
+            fspec = temporal.fuse_steps(spec, t)
+            fused_specs[t] = fspec
+        if t == 1 and option:
+            opts = [option]
+        else:
+            opts = legal_covers(fspec)
+        for oi, opt in enumerate(opts):
+            cover = cl.make_cover(fspec, opt)
+            for nm in names:
+                be = get_backend(nm)
+                if not be.supports(fspec):
+                    continue
+                if not be.uses_cover and oi > 0:
+                    continue  # cover-free execution: one row per depth
+                cands.append(_candidate(
+                    spec, fspec, t, opt, cover, nm, block, local_grid,
+                    sharded_axes, problem.boundary, base_flops,
+                    problem.dtype_bytes, hw))
+    if not cands:
+        raise ValueError("no feasible (cover x backend x fuse) candidate — "
+                         "check the backend pins against the spec")
+
+    best = min(cands, key=_selection_key)
+    depth = best.depth if problem.steps else 1
+    if depth == 1:
+        # fused and unfused operator coincide: keep the decision record
+        # consistent with what compile() executes
+        base_option = best.option
+    schedule = tuple(temporal.fuse_schedule(problem.steps, depth))
+
+    if problem.boundary == "valid":
+        halo_strategy = "none"
+    elif problem.mesh is not None:
+        # the compiled stepper exchanges on EVERY named mesh axis (size-1
+        # axes permute to themselves, carrying no wire traffic — t_comm
+        # already reflects that), so the record matches the executable
+        halo_strategy = "exchange"
+    else:
+        halo_strategy = "pad"
+    sharding = None
+    if problem.mesh is not None:
+        sharding = {"mesh_shape": [int(n) for n in problem.mesh.devices.shape],
+                    "mesh_axes": list(problem.mesh.axis_names),
+                    "grid_axes": list(problem.grid_axes)}
+
+    return ExecutionPlan(
+        version=PLAN_VERSION,
+        problem=problem.to_dict(),
+        hw=_hw_dict(hw),
+        option=best.option,
+        base_option=base_option,
+        backend=best.backend,
+        block=block,
+        unroll=(1,) * spec.ndim,
+        fuse_depth=depth,
+        fuse_schedule=schedule,
+        halo_strategy=halo_strategy,
+        halo_width=depth * r,
+        sharding=sharding,
+        candidates=tuple(cands),
+    )
+
+
+def candidate_cost(problem: StencilProblem, depth: int, option: str,
+                   backend: str, hw=None,
+                   block: tuple[int, ...] | None = None,
+                   base_option: str | None = None) -> CandidateCost:
+    """Model one candidate independently (the property-test entry point).
+
+    ``base_option`` must match the pin given to ``plan()`` (if any) for the
+    Dirichlet-0 strip surcharge to agree with the plan's own table — both
+    paths share :func:`_candidate_context`.
+    """
+    if hw is None:
+        hw = _default_hw()
+    spec = problem.spec
+    block, local_grid, sharded_axes, _, base_flops = \
+        _candidate_context(problem, block, base_option)
+    fspec = spec if depth == 1 else temporal.fuse_steps(spec, depth)
+    cover = cl.make_cover(fspec, option)
+    return _candidate(spec, fspec, depth, option, cover, backend, block,
+                      local_grid, sharded_axes, problem.boundary, base_flops,
+                      problem.dtype_bytes, hw)
+
+
+# ---------------------------------------------------------------------------
+# compile()
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledStencil:
+    """A jit-ready executable for one ExecutionPlan.
+
+    ``fn(x)`` advances ``plan.steps`` applications (already jitted for
+    distributed plans; jit-safe — static schedule — for single-device
+    plans).  ``global_fn`` is always traceable with ``jax.make_jaxpr``;
+    ``step`` is the single shape-preserving step where one exists.
+    """
+
+    plan: ExecutionPlan
+    fn: Callable
+    global_fn: Callable
+    step: Callable | None = None
+    engine: StencilEngine | None = None
+    stepper: Any | None = None
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.fn(x)
+
+
+def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
+                 overlap: bool = True) -> CompiledStencil:
+    """Materialize an ExecutionPlan into an executable.
+
+    Distributed plans (``sharding`` set) compile to the fused sharded
+    stepper: ONE ``T*r``-deep halo exchange per fused chunk, interior
+    overlapped with the wire time.  ``mesh`` defaults to rebuilding the
+    recorded mesh shape from the available devices.
+    """
+    spec = eplan.spec
+    boundary = eplan.boundary
+    if eplan.sharding is not None:
+        from repro.core.distributed import make_fused_distributed_stepper
+        sh = eplan.sharding
+        if mesh is None:
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh(sh["mesh_shape"], sh["mesh_axes"])
+        if list(mesh.axis_names) != list(sh["mesh_axes"]) or \
+                list(mesh.devices.shape) != list(sh["mesh_shape"]):
+            raise ValueError(f"mesh {mesh.axis_names}{mesh.devices.shape} "
+                             f"does not match the plan's {sh}")
+        stepper = make_fused_distributed_stepper(
+            spec, mesh, sh["grid_axes"], schedule=eplan.fuse_schedule,
+            option=eplan.base_option,
+            fused_option=eplan.option if eplan.fuse_depth > 1 else "auto",
+            backend=eplan.backend, boundary=boundary, block=eplan.block,
+            overlap=overlap, interpret=interpret)
+        return CompiledStencil(plan=eplan, fn=stepper.fn,
+                               global_fn=stepper.global_fn, stepper=stepper)
+
+    eng = StencilEngine(spec, option=eplan.base_option, backend=eplan.backend,
+                        block=eplan.block, boundary=boundary,
+                        interpret=interpret)
+    for t in set(eplan.fuse_schedule):
+        if t > 1:
+            eng.fused_engine(t, option=eplan.option
+                             if t == eplan.fuse_depth else "auto")
+    schedule = eplan.fuse_schedule
+    grid = eplan.grid
+    nd = spec.ndim
+
+    def fn(x: jnp.ndarray) -> jnp.ndarray:
+        if tuple(x.shape[x.ndim - nd:]) != grid:
+            raise ValueError(f"input spatial shape "
+                             f"{tuple(x.shape[x.ndim - nd:])} != planned "
+                             f"grid {grid}")
+        for t in schedule:
+            x = eng._apply_chunk(x, t)
+        return x
+
+    step = eng.step_fn() if boundary != "valid" else None
+    return CompiledStencil(plan=eplan, fn=fn, global_fn=fn, step=step,
+                           engine=eng)

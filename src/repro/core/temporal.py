@@ -26,6 +26,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.matrixization import block_hbm_bytes
 from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
 __all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio",
@@ -124,11 +125,8 @@ class FuseDecision:
         raise KeyError(depth)
 
 
-def _block_bytes(block: tuple[int, ...], halo: int, dtype_bytes: int) -> float:
-    """HBM bytes to update one block: haloed read + write-back."""
-    read = float(np.prod([b + 2 * halo for b in block]))
-    write = float(np.prod(block))
-    return dtype_bytes * (read + write)
+# HBM bytes to update one block — shared with the planner's cost model.
+_block_bytes = block_hbm_bytes
 
 
 def choose_fuse_depth(spec: StencilSpec, steps: int,

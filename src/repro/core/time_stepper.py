@@ -16,7 +16,7 @@ from jax import lax
 from repro.core import halo
 
 __all__ = ["EvolveResult", "boundary_step", "evolve", "evolve_until",
-           "evolve_fused"]
+           "evolve_fused", "evolve_compiled"]
 
 
 class EvolveResult(NamedTuple):
@@ -89,3 +89,14 @@ def evolve_fused(engine, x: jnp.ndarray, steps: int,
     final = engine.sweep(x, steps, fuse=fuse)
     res = jnp.linalg.norm(final - x) / (jnp.linalg.norm(x) + 1e-30)
     return EvolveResult(final, jnp.asarray(steps), res)
+
+
+def evolve_compiled(compiled, x: jnp.ndarray) -> EvolveResult:
+    """Evolve via a planner executable (``repro.api.compile``'s output).
+
+    The step count is the plan's own ``steps`` — the schedule was frozen at
+    plan time, so this is the evolve-interface veneer over one call.
+    """
+    final = compiled(x)
+    res = jnp.linalg.norm(final - x) / (jnp.linalg.norm(x) + 1e-30)
+    return EvolveResult(final, jnp.asarray(compiled.plan.steps), res)

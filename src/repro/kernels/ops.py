@@ -21,7 +21,19 @@ from repro.kernels import ref as kref
 from repro.kernels import stencil_mxu
 from repro.kernels import banded_mixer as bm
 
-__all__ = ["stencil_matrixized", "banded_mix"]
+__all__ = ["stencil_matrixized", "banded_mix", "pallas_backend_core"]
+
+
+def pallas_backend_core(plan, *, interpret: bool = True):
+    """Valid-mode core for the engine/planner backend registry.
+
+    ``plan`` is a :class:`repro.core.engine.StencilPlan`; the returned
+    callable is the registry contract (shrinks each spatial axis by
+    ``2 * spec.order``) backed by the Pallas MXU kernel.
+    """
+    return functools.partial(stencil_matrixized, spec=plan.spec,
+                             cover=plan.cover, block=plan.block,
+                             interpret=interpret)
 
 
 def _pad_to_multiple(x, block, r):

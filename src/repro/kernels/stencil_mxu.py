@@ -80,7 +80,9 @@ def build_kernel_plan(spec: StencilSpec, cover: LineCover,
                 point_taps.append((float(c), gather))
             continue
         band, fixed = mx.line_to_gather_band(line, spec)
-        t = np.asarray(mx.toeplitz_band(band, block[line.axis], dtype=jnp.float32))
+        t = mx.toeplitz_band_np(band, block[line.axis]).astype(np.float32)
+        # numpy path: this runs inside jit traces (plan-per-shape); a
+        # jnp intermediate here would be a tracer (see toeplitz_band_np)
         mat_lines.append((line.axis, t, tuple(sorted(fixed.items()))))
     return KernelPlan(spec=spec, block=tuple(block),
                       mat_lines=tuple(mat_lines), point_taps=tuple(point_taps))

@@ -102,7 +102,15 @@ def main():
     ap.add_argument("--out", default="dryrun_results")
     ap.add_argument("--ce-chunk", type=int, default=512)
     ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--stencil-plans", action="store_true",
+                    help="print the stencil planner's PAPER_SUITE report "
+                         "(modelled roofline decisions) and exit")
     args = ap.parse_args()
+
+    if args.stencil_plans:
+        from repro.launch.plan_report import generate_report
+        print(generate_report(), end="")
+        return
 
     os.makedirs(args.out, exist_ok=True)
     jobs = []

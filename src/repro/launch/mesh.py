@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "HardwareSpec", "TPU_V5E"]
+__all__ = ["make_production_mesh", "make_mesh", "HardwareSpec", "TPU_V5E",
+           "TPU_V5P", "HARDWARE", "get_hardware"]
 
 import dataclasses
 
@@ -24,6 +25,17 @@ class HardwareSpec:
 
 TPU_V5E = HardwareSpec(name="tpu_v5e", peak_flops_bf16=197e12,
                        hbm_bw=819e9, ici_bw=50e9, hbm_bytes=16e9)
+TPU_V5P = HardwareSpec(name="tpu_v5p", peak_flops_bf16=459e12,
+                       hbm_bw=2765e9, ici_bw=100e9, hbm_bytes=95e9)
+
+HARDWARE = {hw.name: hw for hw in (TPU_V5E, TPU_V5P)}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    """Look up roofline constants by chip name (planner CLI / plan JSON)."""
+    if name not in HARDWARE:
+        raise KeyError(f"unknown hardware {name!r}; known: {sorted(HARDWARE)}")
+    return HARDWARE[name]
 
 
 def _auto_axis_types_kwargs(n_axes: int) -> dict:

@@ -1,0 +1,57 @@
+"""Plan report: ``plan(problem).explain()`` for the PAPER_SUITE.
+
+The tier-1 golden test (``tests/test_plan_golden.py``) diffs this module's
+output against ``tests/golden/plan_report.txt``, so any cost-model or
+decision change shows up as a reviewable diff.  ``make plan-report`` prints
+it; ``--hw tpu_v5p`` re-targets the roofline constants.
+
+    PYTHONPATH=src python -m repro.launch.plan_report [--hw tpu_v5e]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.planner import StencilProblem, plan
+from repro.core.stencil_spec import PAPER_SUITE
+from repro.launch.mesh import TPU_V5E, get_hardware
+
+# Report cell: one representative shape-preserving evolution per paper spec.
+REPORT_GRID_2D = (256, 256)
+REPORT_GRID_3D = (64, 64, 64)
+REPORT_STEPS = 16
+REPORT_MAX_DEPTH = 4
+REPORT_TOP = 4
+
+
+def generate_report(hw=TPU_V5E, steps: int = REPORT_STEPS,
+                    max_depth: int = REPORT_MAX_DEPTH,
+                    top: int = REPORT_TOP) -> str:
+    """Deterministic plan.explain() report for every PAPER_SUITE spec."""
+    lines = [
+        f"# plan-report: PAPER_SUITE on {hw.name} "
+        f"(steps={steps}, max_depth={max_depth})",
+    ]
+    suite = PAPER_SUITE()
+    for name in sorted(suite):
+        spec = suite[name]
+        grid = REPORT_GRID_2D if spec.ndim == 2 else REPORT_GRID_3D
+        problem = StencilProblem(spec, grid, boundary="periodic", steps=steps)
+        p = plan(problem, hw, max_depth=max_depth)
+        lines.append("")
+        lines.append(f"## {name}")
+        lines.append(p.explain(top=top))
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", default=TPU_V5E.name)
+    ap.add_argument("--steps", type=int, default=REPORT_STEPS)
+    ap.add_argument("--max-depth", type=int, default=REPORT_MAX_DEPTH)
+    args = ap.parse_args()
+    print(generate_report(get_hardware(args.hw), steps=args.steps,
+                          max_depth=args.max_depth), end="")
+
+
+if __name__ == "__main__":
+    main()

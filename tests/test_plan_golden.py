@@ -1,0 +1,36 @@
+"""Golden plan report: the planner's decisions + modelled costs for the
+PAPER_SUITE against TPU_V5E are frozen in ``tests/golden/plan_report.txt``.
+
+Any cost-model or decision change must come with a reviewed golden update:
+regenerate with ``make plan-report > tests/golden/plan_report.txt`` (or
+``python -m repro.launch.plan_report``).  Tier-1 (fast, pure model — no
+compilation)."""
+import difflib
+import os
+
+from repro.launch.plan_report import generate_report
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "plan_report.txt")
+
+
+def test_plan_report_matches_golden():
+    with open(GOLDEN) as f:
+        golden = f.read()
+    current = generate_report()
+    if current != golden:
+        diff = "\n".join(difflib.unified_diff(
+            golden.splitlines(), current.splitlines(),
+            fromfile="tests/golden/plan_report.txt",
+            tofile="generated", lineterm="", n=2))
+        raise AssertionError(
+            "plan report drifted from the golden — if the cost-model change "
+            "is intended, regenerate with `make plan-report > "
+            f"tests/golden/plan_report.txt`\n{diff}")
+
+
+def test_plan_report_covers_whole_suite():
+    from repro.core.stencil_spec import PAPER_SUITE
+    current = generate_report()
+    for name in PAPER_SUITE():
+        assert f"## {name}" in current
+    assert current.count("<- chosen") == len(PAPER_SUITE())

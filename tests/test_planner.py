@@ -1,0 +1,303 @@
+"""Unified plan/compile API: ExecutionPlan round-tripping, the min-cost
+selection property, pins, the backend registry contract, and single-device
+compile parity (DESIGN.md §Planner)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import engine as eng_mod
+from repro.core import stencil_spec as ss
+from repro.core.planner import candidate_cost
+from repro.core.time_stepper import evolve_compiled
+from repro.kernels.ref import stencil_ref
+
+from prop import prop_cases
+
+
+def _problem(spec=None, grid=(48, 48), boundary="periodic", steps=6, **kw):
+    return api.StencilProblem(spec or ss.box(2, 1, seed=0), grid,
+                              boundary=boundary, steps=steps, **kw)
+
+
+def _sequential_ref(x, spec, steps, boundary):
+    for _ in range(steps):
+        x = stencil_ref(x, spec, boundary=boundary)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan round-tripping
+# ---------------------------------------------------------------------------
+
+def test_plan_json_round_trip_identity():
+    p = api.plan(_problem())
+    q = api.ExecutionPlan.from_json(p.to_json())
+    assert q == p
+    assert q.to_json() == p.to_json()
+    # the reconstructed spec is the same operator
+    np.testing.assert_allclose(np.asarray(q.spec.gather_coeffs),
+                               np.asarray(api.box(2, 1, seed=0).gather_coeffs))
+
+
+def test_plan_json_version_guard():
+    import json
+    d = json.loads(api.plan(_problem()).to_json())
+    d["version"] = 999
+    with pytest.raises(ValueError):
+        api.ExecutionPlan.from_json(json.dumps(d))
+
+
+def test_cover_free_backend_scored_once_per_depth():
+    """'separable' execution ignores the line cover, so the planner must
+    not emit one (identical) candidate per cover option."""
+    p = api.plan(_problem(ss.star(2, 2, seed=1), steps=6))
+    for depth in {c.depth for c in p.candidates}:
+        assert sum(1 for c in p.candidates
+                   if c.backend == "separable" and c.depth == depth) == 1
+
+
+def test_depth_one_plan_records_what_compile_executes():
+    """When fuse_depth == 1 the fused and base operator coincide; the
+    recorded cover must be the one the compiled engine actually uses."""
+    p = api.plan(_problem(ss.star(2, 2, seed=1), steps=1))
+    assert p.fuse_depth == 1
+    assert p.option == p.base_option
+    run = api.compile(p)
+    if run.engine is not None:
+        assert run.engine.plan.option == p.option
+
+
+@prop_cases(n=6, seed=53)
+def test_plan_round_trip_and_min_cost_property(draw):
+    """plan() must pick the min modelled cost among ALL enumerated
+    (cover x backend x fuse) candidates, and survive JSON round trips."""
+    spec = (ss.box if draw.bool() else ss.star)(2, draw.int(1, 2),
+                                                seed=draw.int(0, 99))
+    boundary = draw.choice(["periodic", "zero", "valid"])
+    n = draw.int(24, 64)
+    pin = draw.choice([None, "parallel"])
+    p = api.plan(_problem(spec, grid=(n, n), boundary=boundary,
+                          steps=draw.int(1, 9)), option=pin)
+    assert api.ExecutionPlan.from_json(p.to_json()) == p
+    best = min(c.t_per_step for c in p.candidates)
+    assert p.chosen().t_per_step == best
+    # independent recompute of a few candidates agrees with the table
+    for c in p.candidates[:: max(1, len(p.candidates) // 3)]:
+        again = candidate_cost(_problem(spec, grid=(n, n), boundary=boundary,
+                                        steps=p.steps),
+                               c.depth, c.option, c.backend, block=p.block,
+                               base_option=pin)
+        assert again == c
+
+
+def test_plan_explain_reports_decisions_and_costs():
+    p = api.plan(_problem(ss.star(2, 2, seed=1), steps=8))
+    text = p.explain()
+    for needle in ("backend=", "cover=", "block=", "fuse=", "schedule=",
+                   "halo=", "t_compute", "t_traffic", "t_comm", "t/step",
+                   "<- chosen"):
+        assert needle in text, f"explain() missing {needle!r}:\n{text}"
+    # every displayed candidate row carries its modelled per-step cost
+    ch = p.chosen()
+    assert f"{ch.t_per_step:.3e}" in text
+
+
+# ---------------------------------------------------------------------------
+# Pins and validation
+# ---------------------------------------------------------------------------
+
+def test_plan_pins_fuse_backend_option():
+    prob = _problem(steps=7)
+    p = api.plan(prob, fuse=3, backends=["jnp"], option="parallel")
+    assert p.fuse_depth == 3 and p.backend == "jnp"
+    assert p.base_option == "parallel"
+    assert p.fuse_schedule == (3, 3, 1)
+    assert all(c.backend == "jnp" for c in p.candidates)
+    with pytest.raises(ValueError):
+        api.plan(prob, fuse=0)
+    with pytest.raises(ValueError):
+        api.plan(prob, fuse=1000)  # beyond the shape/boundary cap
+    with pytest.raises(ValueError):
+        api.plan(prob, backends=["no_such_backend"])
+
+
+def test_plan_validation_errors():
+    with pytest.raises(ValueError):
+        api.StencilProblem(ss.box(2, 1), grid=(16, 16, 16))  # ndim mismatch
+    with pytest.raises(ValueError):
+        api.StencilProblem(ss.box(2, 1), grid=(16, 16), boundary="bogus")
+    with pytest.raises(ValueError):
+        api.StencilProblem(ss.box(2, 1), grid=(16, 16), steps=-1)
+    with pytest.raises(ValueError):  # grid_axes without mesh
+        api.StencilProblem(ss.box(2, 1), grid=(16, 16),
+                           grid_axes=("gx", ""))
+    # backend that supports no 3-D spec -> no feasible candidate
+    with pytest.raises(ValueError):
+        api.plan(api.StencilProblem(ss.box(3, 1), grid=(12, 12, 12),
+                                    steps=2), backends=["separable"])
+
+
+def test_plan_pinned_fuse_not_limited_by_search_width():
+    """max_depth bounds the SEARCH, not an explicit pin: a feasible pinned
+    depth beyond max_depth must plan (and compile) fine."""
+    prob = _problem(grid=(64, 64), steps=12)
+    p = api.plan(prob, fuse=6, backends=["jnp"])  # > default max_depth=4
+    assert p.fuse_depth == 6 and p.fuse_schedule == (6, 6)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(64, 64)),
+                    jnp.float32)
+    ref = _sequential_ref(x, prob.spec, 12, "periodic")
+    np.testing.assert_allclose(np.asarray(api.compile(p)(x)),
+                               np.asarray(ref), atol=1e-4)
+
+
+def test_explain_works_without_the_plans_backends_registered():
+    """A shipped plan must render its cost table even in a process that
+    never registered the (third-party) backends it mentions."""
+    import dataclasses as dc
+    p = api.plan(_problem())
+    ghost = tuple(dc.replace(c, backend="some_unregistered_plugin")
+                  for c in p.candidates[:2])
+    q = dc.replace(p, candidates=p.candidates + ghost)
+    text = q.explain(top=30)
+    assert "some_unregistered_plugin" in text
+
+
+def test_plan_depth_capped_by_shape_and_boundary():
+    # zero boundary caps T at n_min // (2r): n=12, r=1 -> T <= 6 -> max_depth
+    p = api.plan(_problem(grid=(12, 12), boundary="zero", steps=40),
+                 max_depth=8)
+    assert p.fuse_depth <= 6
+    assert sum(p.fuse_schedule) == 40
+    assert p.halo_width == p.fuse_depth * p.spec.order
+
+
+# ---------------------------------------------------------------------------
+# Backend registry contract
+# ---------------------------------------------------------------------------
+
+def test_backend_registry_third_party_plugin():
+    """register_backend is the extension point: a custom backend is
+    enumerated by the planner, scored by the model, and compiled."""
+    calls = []
+
+    def builder(plan, **opts):
+        from repro.core import matrixization as mx
+        import functools
+        calls.append(plan.spec.describe())
+        return functools.partial(mx.matrixized_apply, spec=plan.spec,
+                                 cover=plan.cover)
+
+    name = "test_custom"
+    api.register_backend(name, builder, mxu_efficiency=0.99)
+    try:
+        assert name in api.backend_names()
+        with pytest.raises(ValueError):  # duplicate registration guarded
+            api.register_backend(name, builder)
+        api.register_backend(name, builder, mxu_efficiency=0.99,
+                             overwrite=True)
+
+        prob = _problem(steps=4)
+        p = api.plan(prob, backends=[name], fuse=2)
+        assert p.backend == name
+        run = api.compile(p)
+        assert calls, "builder was never invoked"
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(48, 48)),
+                        jnp.float32)
+        ref = _sequential_ref(x, prob.spec, 4, "periodic")
+        np.testing.assert_allclose(np.asarray(run(x)), np.asarray(ref),
+                                   atol=1e-4)
+        # the engine path dispatches through the same registry
+        eng = api.StencilEngine(prob.spec, backend=name, boundary="periodic")
+        np.testing.assert_allclose(np.asarray(eng(x)),
+                                   np.asarray(stencil_ref(x, prob.spec,
+                                                          boundary="periodic")),
+                                   atol=1e-5)
+    finally:
+        del eng_mod._BACKENDS[name]
+
+
+def test_backend_supports_gates_dispatch():
+    with pytest.raises(ValueError):
+        api.StencilEngine(ss.box(3, 1), backend="separable")
+
+
+# ---------------------------------------------------------------------------
+# compile(): single-device parity with the sequential reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("boundary", ["periodic", "zero", "valid"])
+def test_compile_matches_sequential(boundary):
+    spec = ss.star(2, 1, seed=4)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(30, 30)), jnp.float32)
+    prob = _problem(spec, grid=(30, 30), boundary=boundary, steps=5)
+    run = api.compile(api.plan(prob, backends=["jnp"]))
+    ref = _sequential_ref(x, spec, 5, boundary)
+    np.testing.assert_allclose(np.asarray(run(x)), np.asarray(ref), atol=1e-4)
+    if boundary != "valid":
+        assert run.step is not None
+        np.testing.assert_allclose(
+            np.asarray(run.step(x)),
+            np.asarray(stencil_ref(x, spec, boundary=boundary)), atol=1e-5)
+
+
+def test_compile_is_jit_safe_and_shape_checked():
+    prob = _problem(steps=6)
+    run = api.compile(api.plan(prob, fuse=3, backends=["jnp"]))
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(48, 48)),
+                    jnp.float32)
+    f = jax.jit(run.fn)
+    f(x), f(x), f(x)
+    assert f._cache_size() == 1
+    with pytest.raises(ValueError):
+        run(jnp.ones((20, 20), jnp.float32))  # not the planned grid
+
+
+def test_compile_default_backend_is_jit_ready():
+    """plan() without pins picks the pallas backend; the compiled
+    executable must survive jax.jit (kernel planning stays in numpy even
+    inside the trace)."""
+    spec = ss.box(2, 1, seed=0)
+    prob = _problem(spec, grid=(24, 24), steps=3)
+    p = api.plan(prob)
+    assert p.backend == "pallas"
+    run = api.compile(p)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(24, 24)),
+                    jnp.float32)
+    out = jax.jit(run.fn)(x)
+    ref = _sequential_ref(x, spec, 3, "periodic")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_compile_zero_steps_is_identity():
+    prob = _problem(steps=0)
+    p = api.plan(prob)
+    assert p.fuse_schedule == ()
+    run = api.compile(p)
+    x = jnp.ones((48, 48), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(run(x)), np.asarray(x))
+
+
+def test_evolve_compiled_and_engine_from_plan():
+    spec = ss.box(2, 1, seed=5)
+    prob = _problem(spec, steps=6)
+    p = api.plan(prob, backends=["jnp"])
+    run = api.compile(p)
+    x = jnp.asarray(np.random.default_rng(13).normal(size=(48, 48)),
+                    jnp.float32)
+    res = evolve_compiled(run, x)
+    np.testing.assert_allclose(np.asarray(res.state),
+                               np.asarray(_sequential_ref(x, spec, 6,
+                                                          "periodic")),
+                               atol=1e-4)
+    assert int(res.steps_run) == 6
+    # the engine compatibility constructor honours the plan's decisions
+    eng = api.StencilEngine.from_execution_plan(p)
+    assert eng.plan.backend == p.backend
+    assert eng.plan.option == p.base_option
+    assert eng.plan.block == p.block

@@ -84,6 +84,49 @@ def test_sweep_random_depths_and_schedules(draw):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
 
 
+def test_sweep_fn_is_jit_safe_and_static():
+    """fuse='auto' and the chunk schedule resolve at closure-BUILD time:
+    the jitted sweep compiles once and stays compiled across calls, and
+    passing ``grid`` pre-builds the fused engines before the first trace."""
+    import jax
+
+    spec = ss.box(2, 1, seed=0)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(24, 24)), jnp.float32)
+
+    eng = StencilEngine(spec, boundary="periodic")
+    fn = eng.sweep_fn(6, fuse=3, grid=(24, 24))
+    assert 3 in eng._fused_engines, "schedule was not resolved statically"
+    f = jax.jit(fn)
+    out = f(x)
+    f(x), f(x)
+    assert f._cache_size() == 1, "sweep_fn retraced across repeated calls"
+    ref = _sequential_ref(x, spec, 6, "periodic")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+    # fuse='auto' also resolves eagerly (no per-call chooser work under jit)
+    eng2 = StencilEngine(spec, boundary="zero")
+    f2 = jax.jit(eng2.sweep_fn(5, fuse="auto"))
+    out2 = f2(x)
+    f2(x)
+    assert f2._cache_size() == 1
+    np.testing.assert_allclose(np.asarray(out2),
+                               np.asarray(_sequential_ref(x, spec, 5, "zero")),
+                               atol=1e-4)
+
+
+def test_fused_engine_honours_cover_pin_over_cache():
+    """A cached fused engine is only reused when its cover matches the
+    request; a differing pin rebuilds instead of silently winning."""
+    eng = StencilEngine(ss.star(2, 1, seed=0), boundary="periodic")
+    auto = eng.fused_engine(2)
+    assert eng.fused_engine(2) is auto
+    assert eng.fused_engine(2, option=auto.plan.option) is auto
+    other = "minimal" if auto.plan.option != "minimal" else "parallel"
+    pinned = eng.fused_engine(2, option=other)
+    assert pinned.plan.option == other
+
+
 def test_sweep_zero_steps_and_validation():
     spec = ss.box(2, 1, seed=0)
     eng = StencilEngine(spec, boundary="periodic")
