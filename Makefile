@@ -1,7 +1,7 @@
 # Canonical test entry points (see ROADMAP "Tier-1 verify").
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-slow bench-temporal plan-report
+.PHONY: test test-all test-slow bench-temporal plan-report docs-check
 
 # tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
 test:
@@ -23,3 +23,8 @@ bench-temporal:
 # tests/golden/plan_report.txt — regenerate the golden through this target.
 plan-report:
 	@$(PY) -m repro.launch.plan_report
+
+# executable-docs gate: runs every `<!-- docs-check -->`-marked code block
+# in README.md (tests/test_docs.py runs the same check under tier-1).
+docs-check:
+	$(PY) tools/docs_check.py

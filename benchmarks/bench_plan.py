@@ -1,10 +1,14 @@
-"""Planner end-to-end: modelled decision vs measured wall-clock.
+"""Planner end-to-end: modelled decision vs measured wall-clock, with a
+calibration round.
 
 For each PAPER_SUITE cell, plan() the problem, compile() the winner, and
 time it against the naive sequential engine run — the measured speedup
 lands next to the modelled per-step roofline figures so cost-model drift
 is visible (the CPU container measures XLA-CPU, the model measures
-TPU_V5E; the *ranking* is what should agree).
+TPU_V5E; the *ranking* is what should agree).  Then run the measured-cost
+calibration pass (launch.calibrate) over the plan's top candidates and
+re-plan with the resulting record, reporting the per-backend factors and
+whether the measured numbers re-ranked the decision.
 
     PYTHONPATH=src python benchmarks/bench_plan.py
 """
@@ -47,24 +51,40 @@ def run(names=("box2d_r1", "star2d_r2"), n=256, steps=16, repeats=5):
         t_fused = _time(fused, x, repeats)
         err = float(jnp.abs(seq(x) - fused(x)).max())
         ch = p.chosen()
+
+        # calibration round: measure the top candidates, re-rank the table
+        record = api.calibrate(problem, top_k=2, backends=["jnp"])
+        p_cal = api.plan(problem, backends=["jnp"], calibration=record)
+        cal = p_cal.chosen()
         rows.append({
             "name": name, "depth": p.fuse_depth, "cover": p.option,
-            "backend": p.backend,
+            "backend": p.backend, "block": "x".join(map(str, p.block)),
             "t_seq_us": t_seq * 1e6, "t_plan_us": t_fused * 1e6,
             "speedup": t_seq / t_fused,
             "model_step_ns": ch.t_per_step * 1e9,
             "max_err": err,
+            "cal_traffic_factor": record.traffic.get(p.backend, 1.0),
+            "cal_depth": p_cal.fuse_depth,
+            "cal_block": "x".join(map(str, p_cal.block)),
+            "cal_step_ns": cal.t_per_step * 1e9,
+            "reranked": (p_cal.fuse_depth, p_cal.option, p_cal.backend,
+                         p_cal.block) != (p.fuse_depth, p.option, p.backend,
+                                          p.block),
         })
     return rows
 
 
 def main():
-    print("name,depth,cover,backend,t_seq_us,t_plan_us,cpu_speedup,"
-          "v5e_model_step_ns,max_err")
+    print("name,depth,cover,backend,block,t_seq_us,t_plan_us,cpu_speedup,"
+          "v5e_model_step_ns,max_err,cal_traffic_factor,cal_depth,cal_block,"
+          "cal_step_ns,reranked")
     for r in run():
         print(f"{r['name']},{r['depth']},{r['cover']},{r['backend']},"
+              f"{r['block']},"
               f"{r['t_seq_us']:.0f},{r['t_plan_us']:.0f},{r['speedup']:.2f},"
-              f"{r['model_step_ns']:.1f},{r['max_err']:.1e}")
+              f"{r['model_step_ns']:.1f},{r['max_err']:.1e},"
+              f"{r['cal_traffic_factor']:.2f},{r['cal_depth']},"
+              f"{r['cal_block']},{r['cal_step_ns']:.1f},{r['reranked']}")
 
 
 if __name__ == "__main__":

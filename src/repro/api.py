@@ -9,10 +9,19 @@
     run = api.compile(p)            # jit-ready executable
     y = run(x)
 
+The planner autotunes the output tile (``candidate_blocks`` enumerates
+MXU-aligned blocks and every candidate row is scored per block), and its
+analytic cost table can be calibrated against real compiled executables:
+
+    record = api.calibrate(problem, backends=["jnp"])   # measure top-K
+    p = api.plan(problem, calibration=record)           # re-rank measured
+
 Distributed: give the problem a mesh and per-axis mesh names and the
 compiled stepper exchanges a single ``T*r``-deep halo once per fused chunk
 (DESIGN.md §Planner).  Third-party kernels plug in through
-:func:`register_backend` and are scored by the same cost model.
+:func:`register_backend` and are scored by the same cost model; see
+DESIGN.md §Autotune for the block-search space and the calibration record
+schema, and README.md for a runnable tour of this module.
 """
 from __future__ import annotations
 
@@ -20,17 +29,22 @@ from repro.core.engine import (Backend, StencilEngine, backend_names,
                                choose_cover, default_block, get_backend,
                                legal_covers, register_backend)
 from repro.core.planner import (CandidateCost, CompiledStencil, ExecutionPlan,
-                                PLAN_VERSION, StencilProblem, candidate_cost,
-                                compile_plan, plan)
+                                PLAN_VERSION, StencilProblem, candidate_blocks,
+                                candidate_cost, compile_plan, plan)
 from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
                                      from_gather_coeffs, star)
+from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
+                                    calibrate, measure_candidate)
 
 compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
 #                         inside this namespace only, by design)
 
 __all__ = [
     "StencilProblem", "ExecutionPlan", "CandidateCost", "CompiledStencil",
-    "plan", "compile", "compile_plan", "candidate_cost", "PLAN_VERSION",
+    "plan", "compile", "compile_plan", "candidate_cost", "candidate_blocks",
+    "PLAN_VERSION",
+    "CalibrationRecord", "CandidateMeasurement", "calibrate",
+    "measure_candidate",
     "StencilEngine", "Backend", "register_backend", "get_backend",
     "backend_names", "choose_cover", "legal_covers", "default_block",
     "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs",

@@ -121,6 +121,22 @@ class Backend:
     #                           cover's mxu_flops; cover-free backends
     #                           supply their own (spec, block) -> flops
 
+    def effective_efficiency(self, compute_factors=None) -> float:
+        """The backend's calibratable efficiency model.
+
+        ``mxu_efficiency`` is the modelled fraction of peak the backend
+        sustains; a calibration pass (``repro.launch.calibrate``) measures
+        per-backend ``measured/modelled`` flop ratios and the planner feeds
+        them back here — a backend whose compiled executables do N× the
+        modelled MXU work is priced at 1/N of its modelled efficiency.
+        ``compute_factors`` maps backend name -> measured/modelled ratio;
+        missing entries (or None) leave the modelled value untouched.
+        """
+        if not compute_factors:
+            return self.mxu_efficiency
+        factor = float(compute_factors.get(self.name, 1.0))
+        return self.mxu_efficiency / max(factor, 1e-9)
+
 
 _BACKENDS: dict[str, Backend] = {}
 
@@ -137,7 +153,16 @@ def register_backend(name: str, builder: Callable, *,
     (shrinks each spatial axis by ``2 * plan.spec.order``); ``options``
     currently carries ``interpret`` for kernel backends.  Registration is
     the extension point third-party kernels use — the engine and the
-    planner both dispatch through this table.
+    planner both dispatch through this table, so a registered backend is
+    automatically enumerated, priced (``mxu_efficiency`` modelled fraction
+    of peak, optionally refined by a measured calibration record through
+    :meth:`Backend.effective_efficiency`), gated per spec (``supports``),
+    and compiled.  ``uses_cover=False`` marks backends whose execution
+    ignores the line cover (scored once per depth/block instead of once
+    per cover); such backends usually supply ``flops_model(spec, block)``
+    so the planner can price them without a cover.
+
+    Raises ``ValueError`` on duplicate names unless ``overwrite=True``.
     """
     if name in _BACKENDS and not overwrite:
         raise ValueError(f"backend {name!r} already registered "

@@ -24,21 +24,38 @@ Decisions recorded per plan:
 Cost model (per fused sweep over the device-local grid, divided by the
 chunk depth for a per-original-step figure):
   * t_compute = mxu_flops(fused cover, block) * n_blocks
-                / (peak_flops * backend.mxu_efficiency)
+                / (peak_flops * backend.effective_efficiency(calibration))
                 [+ the modelled Dirichlet-0 strip recompute surcharge]
   * t_traffic = block_hbm_bytes(block, T*r) * n_blocks / hbm_bw
+                [* the backend's calibrated traffic factor]
   * t_comm    = 2 * T*r * (face area) * dtype_bytes / ici_bw  per sharded
                 axis (one deep exchange per chunk)
 The chosen candidate minimizes max(t_compute, t_traffic, t_comm) / T; ties
 break toward the higher-efficiency backend, then lexicographically, so
 plans are deterministic.
+
+Autotuning (DESIGN.md §Autotune) extends the search along two axes:
+  * Block search — instead of taking ``default_block``, plan() scores every
+    candidate at each MXU-aligned output tile from
+    :func:`candidate_blocks`, which enumerates lane/sublane-aligned extents
+    clipped to the local grid and prunes them with the same roofline
+    helpers (``matrixization.mxu_flops`` / ``separable_mxu_flops`` for the
+    optimistic compute term, ``block_hbm_bytes`` for haloed traffic, a VMEM
+    residency bound for feasibility).
+  * Calibration — ``plan(problem, calibration=record)`` re-ranks the table
+    with per-backend factors measured from real compiled executables
+    (:mod:`repro.launch.calibrate`): the compute factor scales the
+    backend's modelled efficiency, the traffic factor scales t_traffic.
+    Every row keeps its uncalibrated score in ``t_model`` so explain()
+    renders modelled-vs-calibrated side by side.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import math
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -55,9 +72,9 @@ from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
 __all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
            "CompiledStencil", "plan", "compile_plan", "candidate_cost",
-           "PLAN_VERSION"]
+           "candidate_blocks", "PLAN_VERSION"]
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -68,8 +85,28 @@ PLAN_VERSION = 1
 class StencilProblem:
     """What to solve, declaratively — the planner decides how.
 
-    ``mesh`` (a ``jax.sharding.Mesh``) and ``grid_axes`` (one mesh-axis name
-    per spatial axis, '' for unsharded) are set together or not at all.
+    Fields:
+      spec: the stencil operator (:class:`repro.core.stencil_spec
+        .StencilSpec`; build one with ``api.box`` / ``api.star`` /
+        ``api.diagonal`` / ``api.from_gather_coeffs``).
+      grid: global spatial extents, one per ``spec.ndim`` axis.
+      dtype: any numpy/jax dtype name; prices the roofline traffic terms
+        and types the compiled executable's expected input.
+      boundary: "periodic" | "zero" (Dirichlet-0) | "valid" (shrinking —
+        single-step/sweep only, and never distributed).
+      steps: how many stencil applications ``compile(plan(...))`` advances
+        per call (0 = identity; the fuse schedule covers them exactly).
+      mesh / grid_axes: set together or not at all.  ``mesh`` is a
+        ``jax.sharding.Mesh``; ``grid_axes`` names one mesh axis per
+        spatial axis ('' for unsharded).  When set, planning is per
+        device-local shard and compile() emits the fused distributed
+        stepper (one deep halo exchange per fused chunk).
+
+    Example::
+
+        problem = StencilProblem(api.star(2, 2), grid=(256, 256),
+                                 boundary="periodic", steps=32)
+        run = api.compile(api.plan(problem))
     """
 
     spec: StencilSpec
@@ -139,17 +176,31 @@ class StencilProblem:
 
 @dataclasses.dataclass(frozen=True)
 class CandidateCost:
-    """Roofline model of one (fuse depth, cover, backend) candidate."""
+    """Roofline model of one (fuse depth, cover, backend, block) candidate.
+
+    ``t_compute`` / ``t_traffic`` / ``t_comm`` are the CALIBRATED seconds
+    per fused sweep (equal to the raw modelled terms when the plan carries
+    no calibration); ``t_per_step`` ranks the table.  ``t_model`` always
+    holds the uncalibrated per-step score, so a calibrated plan renders
+    modelled-vs-measured drift per row.
+    """
     depth: int
     option: str
     backend: str
+    block: tuple[int, ...]  # output tile this row was scored at
     mxu_flops: float        # per fused sweep over the local grid
     hbm_bytes: float        # per fused sweep over the local grid
     ici_bytes: float        # per fused chunk (deep halo exchange)
     t_compute: float        # seconds per sweep
     t_traffic: float
     t_comm: float
-    t_per_step: float       # max(compute, traffic, comm) / depth
+    t_model: float          # UNcalibrated max(compute, traffic, comm)/depth
+    t_per_step: float       # calibrated max(compute, traffic, comm) / depth
+
+    @property
+    def key(self) -> tuple:
+        """Identity of the decision this row prices (table join key)."""
+        return (self.depth, self.option, self.backend, self.block)
 
 
 def _n_blocks(local_grid: Sequence[int], block: Sequence[int]) -> int:
@@ -172,14 +223,15 @@ def _selection_key(c: CandidateCost):
     backend, then lexicographic."""
     return (c.t_per_step, (c.t_compute + c.t_traffic + c.t_comm) / c.depth,
             -_backend_efficiency(c.backend),
-            c.depth, c.option, c.backend)
+            c.depth, c.option, c.backend, c.block)
 
 
 def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
                option: str, cover: cl.LineCover, backend: str,
                block: tuple[int, ...], local_grid: tuple[int, ...],
                sharded_axes: Sequence[int], boundary: str,
-               base_flops: float, dtype_bytes: int, hw) -> CandidateCost:
+               base_flops: float, dtype_bytes: int, hw,
+               calib: Mapping | None = None) -> CandidateCost:
     be = get_backend(backend)
     if be.flops_model is not None:
         flops_block = be.flops_model(fspec, block)
@@ -199,14 +251,101 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
     for a in sharded_axes:
         face = float(np.prod([g for i, g in enumerate(local_grid) if i != a]))
         ici += 2 * depth * spec.order * face * dtype_bytes
-    t_compute = flops / (hw.peak_flops_bf16 * be.mxu_efficiency)
-    t_traffic = bytes_hbm / hw.hbm_bw
+    t_compute_raw = flops / (hw.peak_flops_bf16 * be.mxu_efficiency)
+    t_traffic_raw = bytes_hbm / hw.hbm_bw
     t_comm = ici / hw.ici_bw if ici else 0.0
+    if calib is not None:
+        eff = be.effective_efficiency(calib.get("compute"))
+        t_compute = flops / (hw.peak_flops_bf16 * eff)
+        t_traffic = t_traffic_raw * float(
+            calib.get("traffic", {}).get(backend, 1.0))
+    else:
+        t_compute, t_traffic = t_compute_raw, t_traffic_raw
     return CandidateCost(depth=depth, option=option, backend=backend,
+                         block=tuple(block),
                          mxu_flops=flops, hbm_bytes=bytes_hbm, ici_bytes=ici,
                          t_compute=t_compute, t_traffic=t_traffic,
                          t_comm=t_comm,
+                         t_model=max(t_compute_raw, t_traffic_raw,
+                                     t_comm) / depth,
                          t_per_step=max(t_compute, t_traffic, t_comm) / depth)
+
+
+# ---------------------------------------------------------------------------
+# Block search (DESIGN.md §Autotune)
+# ---------------------------------------------------------------------------
+
+_VMEM_BYTES = 16 * 2 ** 20   # v5e/v5p VMEM per core
+_VMEM_BUDGET = 0.5 * _VMEM_BYTES   # haloed read + output tile resident;
+#                                    the rest is Toeplitz operators + slack
+
+# Per-axis aligned extents: the minormost axis stays a multiple of the
+# 128-wide lane dimension, the second-to-minor of the 8-deep sublane; the
+# leading 3-D axis is the sequential-grid axis, where small tiles amortize
+# nothing and large ones only cut halo re-reads.
+_ALIGNED_EXTENTS = {
+    1: ((128, 256, 512),),
+    2: ((32, 64, 128, 256, 512), (128, 256)),
+    3: ((4, 8, 16, 32, 64), (32, 64, 128), (128, 256)),
+}
+
+
+def candidate_blocks(spec: StencilSpec, local_grid: Sequence[int],
+                     hw=None, dtype_bytes: int = 4, *,
+                     halo_width: int | None = None,
+                     max_blocks: int = 4) -> list[tuple[int, ...]]:
+    """MXU-aligned candidate output tiles for the planner's block search.
+
+    Enumerates the cartesian product of lane/sublane-aligned per-axis
+    extents (clipped to the device-local grid), then prunes:
+
+      1. *feasibility* — the haloed input tile plus the output tile must
+         fit the VMEM residency budget (``block_hbm_bytes`` at
+         ``halo_width``, default the unfused ``spec.order``);
+      2. *roofline score* — per output element, the max of the optimistic
+         compute term (cheapest legal cover via ``matrixization.mxu_flops``,
+         and for 2-D also ``separable_mxu_flops``) and the haloed HBM
+         traffic term; only the best ``max_blocks`` tiles survive.
+
+    The clipped ``default_block`` is always in the result, so the search
+    can never do worse than the pre-autotune planner.  Deterministic: the
+    result is sorted and depends only on the arguments.
+    """
+    if hw is None:
+        hw = _default_hw()
+    nd = spec.ndim
+    r = spec.order
+    if halo_width is None:
+        halo_width = r
+    default = tuple(min(b, int(g)) for b, g in
+                    zip(default_block(spec), local_grid))
+    extents = _ALIGNED_EXTENTS.get(nd)
+    if extents is None:               # ndim > 3: no aligned table, no search
+        return [default]
+    sizes = [sorted({min(int(s), int(g)) for s in ext} | {d})
+             for ext, g, d in zip(extents, local_grid, default)]
+    blocks = {tuple(b) for b in itertools.product(*sizes)}
+    blocks.add(default)
+
+    bytes_of = {blk: mx.block_hbm_bytes(blk, halo_width, dtype_bytes)
+                for blk in blocks}
+    feasible = sorted(b for b in blocks
+                      if bytes_of[b] <= _VMEM_BUDGET) or [default]
+    covers = [cl.make_cover(spec, o) for o in legal_covers(spec)]
+
+    def score(blk):
+        flops = min(mx.mxu_flops(cover, blk) for cover in covers)
+        if nd == 2:
+            flops = min(flops, mx.separable_mxu_flops(spec, blk))
+        t_c = flops / hw.peak_flops_bf16
+        t_t = bytes_of[blk] / hw.hbm_bw
+        return max(t_c, t_t) / float(np.prod(blk))
+
+    ranked = sorted(feasible, key=lambda b: (score(b), b))
+    keep = ranked[:max(1, int(max_blocks))]
+    if default not in keep:
+        keep[-1] = default
+    return sorted(keep)
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +377,10 @@ class ExecutionPlan:
     halo_width: int
     sharding: dict | None
     candidates: tuple[CandidateCost, ...]
+    calibration: dict | None = None   # measured per-backend factor summary
+    #   {"hw": str, "compute": {backend: measured/modelled flops},
+    #    "traffic": {backend: measured/modelled bytes}} — see
+    #   repro.launch.calibrate.CalibrationRecord
 
     # -- reconstruction ----------------------------------------------------
     @property
@@ -259,10 +402,14 @@ class ExecutionPlan:
 
     def chosen(self) -> CandidateCost:
         for c in self.candidates:
-            if (c.depth, c.option, c.backend) == (self.fuse_depth, self.option,
-                                                  self.backend):
+            if c.key == (self.fuse_depth, self.option, self.backend,
+                         self.block):
                 return c
         raise KeyError("chosen candidate missing from the cost table")
+
+    def ranked(self) -> tuple[CandidateCost, ...]:
+        """The cost table in selection order (best candidate first)."""
+        return tuple(sorted(self.candidates, key=_selection_key))
 
     # -- serialization -----------------------------------------------------
     def to_json(self, indent: int | None = None) -> str:
@@ -270,7 +417,8 @@ class ExecutionPlan:
         d["block"] = list(self.block)
         d["unroll"] = list(self.unroll)
         d["fuse_schedule"] = list(self.fuse_schedule)
-        d["candidates"] = [dataclasses.asdict(c) for c in self.candidates]
+        d["candidates"] = [dict(dataclasses.asdict(c), block=list(c.block))
+                           for c in self.candidates]
         return json.dumps(d, indent=indent)
 
     @classmethod
@@ -283,7 +431,9 @@ class ExecutionPlan:
         d["block"] = tuple(d["block"])
         d["unroll"] = tuple(d["unroll"])
         d["fuse_schedule"] = tuple(d["fuse_schedule"])
-        d["candidates"] = tuple(CandidateCost(**c) for c in d["candidates"])
+        d["candidates"] = tuple(
+            CandidateCost(**dict(c, block=tuple(c["block"])))
+            for c in d["candidates"])
         return cls(**d)
 
     # -- reporting ---------------------------------------------------------
@@ -298,7 +448,17 @@ class ExecutionPlan:
         return s
 
     def explain(self, top: int = 8) -> str:
-        """Human-readable decision record with the modelled cost table."""
+        """Human-readable decision record with the modelled cost table.
+
+        Column meanings (one row per enumerated candidate, best first):
+        ``depth`` fused-chunk length T, ``cover`` coefficient-line cover of
+        the T-fused operator, ``backend`` registry entry, ``block`` output
+        tile the row was scored at, ``t_compute``/``t_traffic``/``t_comm``
+        calibrated roofline seconds per fused sweep, ``t/model`` the
+        UNcalibrated per-step score, ``t/step`` the calibrated per-step
+        score the ranking minimizes (the two columns coincide when the plan
+        carries no calibration).
+        """
         p = self.problem
         spec = self.spec
         sh = self.sharding
@@ -317,20 +477,33 @@ class ExecutionPlan:
             f"(base {self.base_option}) block={self.block} "
             f"fuse={self.fuse_depth} schedule={self.schedule_str()} "
             f"halo={self.halo_strategy} width={self.halo_width}",
-            f"modelled/step: compute {ch.t_compute / ch.depth:.3e}s, "
+            f"{'modelled' if self.calibration is None else 'calibrated'}"
+            f"/step: compute {ch.t_compute / ch.depth:.3e}s, "
             f"traffic {ch.t_traffic / ch.depth:.3e}s, "
             f"comm {ch.t_comm / ch.depth:.3e}s -> {ch.t_per_step:.3e}s",
-            "  rank depth cover       backend     t_compute   t_traffic   "
-            "t_comm      t/step",
         ]
-        ranked = sorted(self.candidates, key=_selection_key)
+        if self.calibration is not None:
+            cal = self.calibration
+            facts = " ".join(
+                f"{be}:x{cal['compute'].get(be, 1.0):.2f}/"
+                f"x{cal['traffic'].get(be, 1.0):.2f}"
+                for be in sorted(set(cal["compute"]) | set(cal["traffic"])))
+            lines.append(f"calibrated ({cal.get('hw', '?')} measured, "
+                         f"compute/traffic factors): {facts}")
+        lines.append(
+            "  rank depth cover       backend     block        t_compute   "
+            "t_traffic   t_comm      t/model     t/step")
+        ranked = self.ranked()
         for i, c in enumerate(ranked[:top]):
-            mark = "  <- chosen" if (c.depth, c.option, c.backend) == (
-                self.fuse_depth, self.option, self.backend) else ""
+            mark = "  <- chosen" if c.key == (
+                self.fuse_depth, self.option, self.backend, self.block) \
+                else ""
+            blk = "x".join(str(b) for b in c.block)
             lines.append(
                 f"  {i + 1:4d} {c.depth:5d} {c.option:<11s} {c.backend:<11s} "
+                f"{blk:<12s} "
                 f"{c.t_compute:.3e}   {c.t_traffic:.3e}   {c.t_comm:.3e}   "
-                f"{c.t_per_step:.3e}{mark}")
+                f"{c.t_model:.3e}   {c.t_per_step:.3e}{mark}")
         if len(ranked) > top:
             lines.append(f"  ... {len(ranked) - top} more candidates")
         return "\n".join(lines)
@@ -351,27 +524,44 @@ def _default_hw():
     return TPU_V5E
 
 
-def _candidate_context(problem: StencilProblem,
-                       block: tuple[int, ...] | None,
-                       option: str | None) -> tuple:
-    """Shared plan()/candidate_cost() setup, so the two cost paths cannot
-    drift: (block, local_grid, sharded_axes, base_option, base_flops)."""
-    spec = problem.spec
-    local_grid = problem.local_grid()
-    if block is None:
-        block = tuple(min(b, g) for b, g in
-                      zip(default_block(spec), local_grid))
-    block = tuple(int(b) for b in block)
-    sharded_axes = []
-    if problem.grid_axes is not None:
-        sizes = problem.mesh_axis_sizes()
-        sharded_axes = [i for i, ax in enumerate(problem.grid_axes)
-                        if ax and sizes.get(ax, 1) > 1]
+def _sharded_axes(problem: StencilProblem) -> list[int]:
+    if problem.grid_axes is None:
+        return []
+    sizes = problem.mesh_axis_sizes()
+    return [i for i, ax in enumerate(problem.grid_axes)
+            if ax and sizes.get(ax, 1) > 1]
+
+
+def _base_stats(spec: StencilSpec, block: tuple[int, ...],
+                local_grid: tuple[int, ...],
+                option: str | None) -> tuple[str, float]:
+    """(base cover, unfused-sweep flops) at one block — the shared
+    plan()/candidate_cost() path, so the Dirichlet-0 strip surcharge (which
+    is priced in unfused sweeps) cannot drift between the two."""
     base_option, base_cover = ((option, cl.make_cover(spec, option))
                                if option else choose_cover(spec, block[0]))
     base_flops = float(mx.mxu_flops(base_cover, block)) * _n_blocks(local_grid,
                                                                     block)
-    return block, local_grid, sharded_axes, base_option, base_flops
+    return base_option, base_flops
+
+
+def _calibration_dict(calibration) -> dict | None:
+    """Normalize plan()'s ``calibration`` input to the JSON-native summary
+    stored on the plan: a ``CalibrationRecord``, an equivalent mapping, or
+    None.  Duck-typed so ``core`` never imports ``launch``."""
+    if calibration is None:
+        return None
+    if isinstance(calibration, Mapping):
+        hw = calibration.get("hw", "")
+        compute = calibration.get("compute", {})
+        traffic = calibration.get("traffic", {})
+    else:
+        hw = getattr(calibration, "hw", "")
+        compute = calibration.compute
+        traffic = calibration.traffic
+    return {"hw": str(hw),
+            "compute": {k: float(v) for k, v in sorted(compute.items())},
+            "traffic": {k: float(v) for k, v in sorted(traffic.items())}}
 
 
 def _feasible_depth(boundary: str, r: int, n_min: int, steps: int) -> int:
@@ -388,13 +578,24 @@ def plan(problem: StencilProblem, hw=None, *,
          option: str | None = None,
          fuse: int | None = None,
          block: tuple[int, ...] | None = None,
-         max_depth: int = 4) -> ExecutionPlan:
-    """Enumerate (cover x backend x fuse) candidates, pick the min-cost one.
+         max_depth: int = 4,
+         max_blocks: int = 4,
+         calibration=None) -> ExecutionPlan:
+    """Enumerate (cover x backend x fuse x block) candidates, pick the
+    min-cost one.
 
-    ``option`` / ``backends`` / ``fuse`` pin a decision instead of searching
-    it (the pinned value still gets its cost modelled and recorded).  A
-    pinned ``option`` constrains the UNFUSED operator; fused operators are
-    re-covered per depth, exactly as the engine's sweep does.
+    ``option`` / ``backends`` / ``fuse`` / ``block`` pin a decision instead
+    of searching it (the pinned value still gets its cost modelled and
+    recorded).  A pinned ``option`` constrains the UNFUSED operator; fused
+    operators are re-covered per depth, exactly as the engine's sweep does.
+    Without a ``block`` pin the search scores every tile from
+    :func:`candidate_blocks` (at most ``max_blocks`` of them).
+
+    ``calibration`` re-ranks the table with measured per-backend factors
+    (a :class:`repro.launch.calibrate.CalibrationRecord` or an equivalent
+    mapping); the uncalibrated score is kept per row in
+    ``CandidateCost.t_model`` and the factor summary is frozen into the
+    plan's ``calibration`` field.
     """
     if hw is None:
         hw = _default_hw()
@@ -408,8 +609,16 @@ def plan(problem: StencilProblem, hw=None, *,
         raise ValueError(f"unknown cover option {option!r}; choose from "
                          f"{list(cl.COVER_OPTIONS)}")
 
-    block, local_grid, sharded_axes, base_option, base_flops = \
-        _candidate_context(problem, block, option)
+    local_grid = problem.local_grid()
+    sharded_axes = _sharded_axes(problem)
+    calib = _calibration_dict(calibration)
+    if block is not None:
+        blocks = [tuple(int(b) for b in block)]
+    else:
+        blocks = candidate_blocks(spec, local_grid, hw, problem.dtype_bytes,
+                                  max_blocks=max_blocks)
+    base_stats = {blk: _base_stats(spec, blk, local_grid, option)
+                  for blk in blocks}
 
     feasible = _feasible_depth(problem.boundary, r, min(local_grid),
                                problem.steps)
@@ -444,16 +653,19 @@ def plan(problem: StencilProblem, hw=None, *,
                     continue
                 if not be.uses_cover and oi > 0:
                     continue  # cover-free execution: one row per depth
-                cands.append(_candidate(
-                    spec, fspec, t, opt, cover, nm, block, local_grid,
-                    sharded_axes, problem.boundary, base_flops,
-                    problem.dtype_bytes, hw))
+                for blk in blocks:
+                    cands.append(_candidate(
+                        spec, fspec, t, opt, cover, nm, blk, local_grid,
+                        sharded_axes, problem.boundary, base_stats[blk][1],
+                        problem.dtype_bytes, hw, calib))
     if not cands:
         raise ValueError("no feasible (cover x backend x fuse) candidate — "
                          "check the backend pins against the spec")
 
     best = min(cands, key=_selection_key)
     depth = best.depth if problem.steps else 1
+    block = best.block
+    base_option = base_stats[block][0]
     if depth == 1:
         # fused and unfused operator coincide: keep the decision record
         # consistent with what compile() executes
@@ -490,29 +702,37 @@ def plan(problem: StencilProblem, hw=None, *,
         halo_width=depth * r,
         sharding=sharding,
         candidates=tuple(cands),
+        calibration=calib,
     )
 
 
 def candidate_cost(problem: StencilProblem, depth: int, option: str,
                    backend: str, hw=None,
                    block: tuple[int, ...] | None = None,
-                   base_option: str | None = None) -> CandidateCost:
+                   base_option: str | None = None,
+                   calibration=None) -> CandidateCost:
     """Model one candidate independently (the property-test entry point).
 
-    ``base_option`` must match the pin given to ``plan()`` (if any) for the
-    Dirichlet-0 strip surcharge to agree with the plan's own table — both
-    paths share :func:`_candidate_context`.
+    ``base_option`` and ``calibration`` must match what was given to
+    ``plan()`` (if anything) for the Dirichlet-0 strip surcharge and the
+    calibrated terms to agree with the plan's own table — both paths share
+    :func:`_base_stats` and :func:`_candidate`.
     """
     if hw is None:
         hw = _default_hw()
     spec = problem.spec
-    block, local_grid, sharded_axes, _, base_flops = \
-        _candidate_context(problem, block, base_option)
+    local_grid = problem.local_grid()
+    if block is None:
+        block = tuple(min(b, g) for b, g in
+                      zip(default_block(spec), local_grid))
+    block = tuple(int(b) for b in block)
+    _, base_flops = _base_stats(spec, block, local_grid, base_option)
     fspec = spec if depth == 1 else temporal.fuse_steps(spec, depth)
     cover = cl.make_cover(fspec, option)
     return _candidate(spec, fspec, depth, option, cover, backend, block,
-                      local_grid, sharded_axes, problem.boundary, base_flops,
-                      problem.dtype_bytes, hw)
+                      local_grid, _sharded_axes(problem), problem.boundary,
+                      base_flops, problem.dtype_bytes, hw,
+                      _calibration_dict(calibration))
 
 
 # ---------------------------------------------------------------------------

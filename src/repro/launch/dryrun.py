@@ -105,11 +105,33 @@ def main():
     ap.add_argument("--stencil-plans", action="store_true",
                     help="print the stencil planner's PAPER_SUITE report "
                          "(modelled roofline decisions) and exit")
+    ap.add_argument("--stencil-calibrate", action="store_true",
+                    help="compile + measure the stencil calibration suite "
+                         "and emit the result in the CalibrationRecord JSON "
+                         "shape (the exact serializer repro.launch.calibrate "
+                         "uses, so the output feeds plan(calibration=...) "
+                         "and plan_report --calibration directly)")
+    ap.add_argument("--calibration-out", default=None, metavar="JSON_PATH",
+                    help="with --stencil-calibrate: write the record here "
+                         "instead of stdout")
     args = ap.parse_args()
 
     if args.stencil_plans:
         from repro.launch.plan_report import generate_report
         print(generate_report(), end="")
+        return
+    if args.stencil_calibrate:
+        # Measured costs in the exact CalibrationRecord shape — ONE
+        # serializer shared with repro.launch.calibrate, not a parallel
+        # print format.
+        from repro.launch.calibrate import calibrate_suite
+        text = calibrate_suite(wall=True).to_json(indent=1)
+        if args.calibration_out:
+            with open(args.calibration_out, "w") as f:
+                f.write(text)
+            print(f"wrote {args.calibration_out}")
+        else:
+            print(text)
         return
 
     os.makedirs(args.out, exist_ok=True)

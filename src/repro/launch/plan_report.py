@@ -3,9 +3,30 @@
 The tier-1 golden test (``tests/test_plan_golden.py``) diffs this module's
 output against ``tests/golden/plan_report.txt``, so any cost-model or
 decision change shows up as a reviewable diff.  ``make plan-report`` prints
-it; ``--hw tpu_v5p`` re-targets the roofline constants.
+it; ``--hw tpu_v5p`` re-targets the roofline constants; ``--calibration
+record.json`` re-ranks every table with the measured per-backend factors of
+a :class:`repro.launch.calibrate.CalibrationRecord` (the golden itself is
+always the UNcalibrated model, so it stays host-independent).
 
     PYTHONPATH=src python -m repro.launch.plan_report [--hw tpu_v5e]
+        [--calibration record.json]
+
+Golden column meanings (one table per PAPER_SUITE spec, one row per
+enumerated candidate, best first — see ``ExecutionPlan.explain``):
+
+    rank       selection order under the deterministic total order
+    depth      fused-chunk length T (temporal fusion, paper §6)
+    cover      coefficient-line cover of the T-fused operator
+    backend    backend registry entry executing the update
+    block      output tile the row was scored at (the autotuner's
+               block search; NxM with the minormost extent lane-aligned)
+    t_compute  calibrated MXU seconds per fused sweep over the grid
+    t_traffic  calibrated HBM seconds per fused sweep
+    t_comm     ICI seconds per fused chunk (deep halo exchange; 0 off-mesh)
+    t/model    UNcalibrated per-step score max(compute,traffic,comm)/T
+    t/step     calibrated per-step score — the quantity plan() minimizes
+               (equals t/model when no calibration is supplied, as in
+               the golden)
 """
 from __future__ import annotations
 
@@ -25,7 +46,7 @@ REPORT_TOP = 4
 
 def generate_report(hw=TPU_V5E, steps: int = REPORT_STEPS,
                     max_depth: int = REPORT_MAX_DEPTH,
-                    top: int = REPORT_TOP) -> str:
+                    top: int = REPORT_TOP, calibration=None) -> str:
     """Deterministic plan.explain() report for every PAPER_SUITE spec."""
     lines = [
         f"# plan-report: PAPER_SUITE on {hw.name} "
@@ -36,7 +57,7 @@ def generate_report(hw=TPU_V5E, steps: int = REPORT_STEPS,
         spec = suite[name]
         grid = REPORT_GRID_2D if spec.ndim == 2 else REPORT_GRID_3D
         problem = StencilProblem(spec, grid, boundary="periodic", steps=steps)
-        p = plan(problem, hw, max_depth=max_depth)
+        p = plan(problem, hw, max_depth=max_depth, calibration=calibration)
         lines.append("")
         lines.append(f"## {name}")
         lines.append(p.explain(top=top))
@@ -48,9 +69,18 @@ def main() -> None:
     ap.add_argument("--hw", default=TPU_V5E.name)
     ap.add_argument("--steps", type=int, default=REPORT_STEPS)
     ap.add_argument("--max-depth", type=int, default=REPORT_MAX_DEPTH)
+    ap.add_argument("--calibration", default=None, metavar="JSON_PATH",
+                    help="CalibrationRecord JSON (e.g. from `dryrun "
+                         "--stencil-calibrate`) to re-rank the tables with")
     args = ap.parse_args()
+    calibration = None
+    if args.calibration:
+        from repro.launch.calibrate import CalibrationRecord
+        with open(args.calibration) as f:
+            calibration = CalibrationRecord.from_json(f.read())
     print(generate_report(get_hardware(args.hw), steps=args.steps,
-                          max_depth=args.max_depth), end="")
+                          max_depth=args.max_depth, calibration=calibration),
+          end="")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,190 @@
+"""Planner autotuning layer: block-size search determinism + win over the
+pre-autotune default, CalibrationRecord round-tripping, measured-factor
+re-ranking, and the calibration-monotonicity regression (DESIGN.md
+§Autotune)."""
+import json
+
+import pytest
+
+from repro import api
+from repro.core import stencil_spec as ss
+from repro.core.planner import candidate_blocks, default_block
+from repro.launch.calibrate import (CALIBRATION_VERSION, CalibrationRecord,
+                                    calibrate, calibrate_suite,
+                                    measure_candidate)
+
+
+def _problem(spec=None, grid=(64, 64), boundary="periodic", steps=6, **kw):
+    return api.StencilProblem(spec or ss.box(2, 1, seed=0), grid,
+                              boundary=boundary, steps=steps, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Block search
+# ---------------------------------------------------------------------------
+
+def test_candidate_blocks_deterministic_aligned_and_clipped():
+    spec = ss.box(3, 2, seed=7)
+    grid = (64, 96, 128)
+    blocks = candidate_blocks(spec, grid)
+    assert blocks == candidate_blocks(spec, grid)  # pure + deterministic
+    assert blocks == sorted(blocks)
+    default = tuple(min(b, g) for b, g in zip(default_block(spec), grid))
+    assert default in blocks  # the search can never lose to the old planner
+    for blk in blocks:
+        assert len(blk) == spec.ndim
+        assert all(1 <= b <= g for b, g in zip(blk, grid))
+
+
+def test_plan_with_block_search_is_deterministic():
+    prob = _problem(ss.star(3, 1, seed=2), grid=(48, 48, 48), steps=8)
+    p1, p2 = api.plan(prob), api.plan(prob)
+    assert p1 == p2
+    assert p1.to_json() == p2.to_json()
+
+
+def test_block_search_beats_default_block_on_paper_suite():
+    """Acceptance: the searched block strictly improves the modelled cost
+    over the clipped default_block for at least one PAPER_SUITE problem
+    (it does for several; star3d_r2 is a stable traffic-bound witness)."""
+    suite = api.PAPER_SUITE()
+    wins = []
+    for name in ("box2d_r2", "star3d_r2"):
+        spec = suite[name]
+        grid = (256, 256) if spec.ndim == 2 else (64, 64, 64)
+        prob = api.StencilProblem(spec, grid, boundary="periodic", steps=16)
+        searched = api.plan(prob)
+        dflt = tuple(min(b, g) for b, g in zip(default_block(spec), grid))
+        pinned = api.plan(prob, block=dflt)
+        assert searched.chosen().t_per_step <= pinned.chosen().t_per_step
+        wins.append(searched.chosen().t_per_step
+                    < pinned.chosen().t_per_step)
+        if wins[-1]:
+            assert searched.block != dflt
+    assert any(wins), "block search never strictly beat default_block"
+
+
+def test_pinned_block_skips_the_search():
+    p = api.plan(_problem(), block=(32, 32))
+    assert p.block == (32, 32)
+    assert {c.block for c in p.candidates} == {(32, 32)}
+
+
+# ---------------------------------------------------------------------------
+# CalibrationRecord
+# ---------------------------------------------------------------------------
+
+def test_calibration_record_json_round_trip():
+    prob = _problem(grid=(48, 48), steps=4)
+    rec = calibrate(prob, top_k=2, backends=["jnp"])
+    assert rec.version == CALIBRATION_VERSION
+    assert rec.measurements and rec.compute["jnp"] > 0
+    assert rec.traffic["jnp"] > 0
+    again = CalibrationRecord.from_json(rec.to_json())
+    assert again == rec
+    assert again.to_json() == rec.to_json()
+
+
+def test_calibration_record_version_guard():
+    rec = CalibrationRecord(version=CALIBRATION_VERSION, hw="tpu_v5e",
+                            problem={}, compute={}, traffic={},
+                            measurements=())
+    d = json.loads(rec.to_json())
+    d["version"] = 999
+    with pytest.raises(ValueError):
+        CalibrationRecord.from_json(json.dumps(d))
+
+
+def test_measure_candidate_reports_positive_costs_and_wall_clock():
+    prob = _problem(grid=(32, 32), steps=2)
+    m = measure_candidate(prob, 2, "parallel", "jnp", (32, 32), wall=True,
+                          repeats=2)
+    assert m.measured_flops > 0 and m.measured_bytes > 0
+    assert m.modelled_flops > 0 and m.modelled_bytes > 0
+    assert m.wall_s is not None and m.wall_s > 0
+
+
+def test_calibrate_suite_pools_cells_into_one_record():
+    rec = calibrate_suite(names=("box2d_r1",), grid=(48, 48), steps=4,
+                          backends=("jnp",), top_k=1)
+    assert rec.problem["suite"] == ["box2d_r1"]
+    assert set(rec.compute) == {"jnp"}
+    # the suite record feeds plan() directly (the dryrun emission path)
+    p = api.plan(_problem(), calibration=CalibrationRecord.from_json(
+        rec.to_json()))
+    assert p.calibration["compute"] == rec.compute
+
+
+# ---------------------------------------------------------------------------
+# Calibration feeding back into plan()
+# ---------------------------------------------------------------------------
+
+def _synthetic_record(compute=None, traffic=None):
+    return CalibrationRecord(version=CALIBRATION_VERSION, hw="tpu_v5e",
+                             problem={}, compute=dict(compute or {}),
+                             traffic=dict(traffic or {}), measurements=())
+
+
+def test_calibration_reranks_the_candidate_table():
+    """Acceptance: plan(problem, calibration=record) demonstrably re-ranks.
+    box2d_r1 at 256^2 is compute-bound, so uncalibrated the higher-
+    efficiency codegen beats jnp; a measured 3x flops blow-up on codegen
+    flips the decision."""
+    prob = _problem(grid=(256, 256), steps=16)
+    p0 = api.plan(prob, backends=["jnp", "codegen"])
+    assert p0.backend == "codegen"
+    assert p0.calibration is None
+    rec = _synthetic_record(compute={"codegen": 3.0})
+    p1 = api.plan(prob, backends=["jnp", "codegen"], calibration=rec)
+    assert p1.backend == "jnp"
+    assert p1.calibration == {"hw": "tpu_v5e", "compute": {"codegen": 3.0},
+                              "traffic": {}}
+    # the uncalibrated score is preserved per row for drift inspection
+    ch = p1.chosen()
+    assert ch.t_model == pytest.approx(ch.t_per_step)  # jnp has no factor
+    top_codegen = next(c for c in p1.ranked() if c.backend == "codegen")
+    assert top_codegen.t_per_step > top_codegen.t_model
+    # and the calibrated plan still round-trips
+    assert api.ExecutionPlan.from_json(p1.to_json()) == p1
+
+
+def test_real_measured_record_changes_ranking_terms():
+    """End-to-end: a record measured off real compiled executables scales
+    the table (the jnp path's measured HBM traffic is far above the tile
+    model, so calibrated t_traffic must grow accordingly)."""
+    prob = _problem(grid=(64, 64), steps=6)
+    rec = calibrate(prob, top_k=2, backends=["jnp"])
+    assert rec.traffic["jnp"] > 1.0
+    p0 = api.plan(prob, backends=["jnp"])
+    p1 = api.plan(prob, backends=["jnp"], calibration=rec)
+    c0 = {c.key: c for c in p0.candidates}
+    for c in p1.candidates:
+        assert c.t_traffic == pytest.approx(
+            c0[c.key].t_traffic * rec.traffic["jnp"])
+        assert c.t_model == pytest.approx(c0[c.key].t_per_step)
+
+
+def test_calibrated_plan_never_outranks_a_strict_dominator():
+    """Regression: calibration is a positive per-backend rescaling, so if
+    candidate A dominates B on every UNcalibrated per-step term (same
+    backend), no calibration record may rank B above A."""
+    prob = _problem(ss.star(2, 2, seed=3), grid=(96, 96), steps=8)
+    p0 = api.plan(prob, backends=["jnp", "codegen"])
+    rec = _synthetic_record(compute={"jnp": 2.5, "codegen": 7.0},
+                            traffic={"jnp": 31.0, "codegen": 1.5})
+    p1 = api.plan(prob, backends=["jnp", "codegen"], calibration=rec)
+    cal = {c.key: c for c in p1.candidates}
+    raw = list(p0.candidates)
+    assert set(cal) == {c.key for c in raw}
+    checked = 0
+    for a in raw:
+        for b in raw:
+            if a.key == b.key or a.backend != b.backend:
+                continue
+            if (a.t_compute / a.depth <= b.t_compute / b.depth
+                    and a.t_traffic / a.depth <= b.t_traffic / b.depth
+                    and a.t_comm / a.depth <= b.t_comm / b.depth):
+                checked += 1
+                assert cal[a.key].t_per_step <= cal[b.key].t_per_step * (
+                    1 + 1e-12), (a.key, b.key)
+    assert checked > 0  # the property was actually exercised

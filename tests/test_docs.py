@@ -1,0 +1,23 @@
+"""The README's marked code blocks must execute (the `make docs-check`
+gate, run here so tier-1 catches doc rot too).  Subprocess: docs_check
+forces a multi-device XLA_FLAGS before jax initializes, which must not
+leak into this pytest process."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_readme_marked_blocks_execute():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)  # docs_check sets its own
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "docs_check.py")],
+        capture_output=True, text=True, timeout=600, env=env, cwd=ROOT)
+    assert proc.returncode == 0, (
+        f"docs-check failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "OK" in proc.stdout
+    # the README currently carries 4 executable blocks; keep this in sync
+    # so silently-skipped markers cannot pass
+    assert "4 block(s) executed" in proc.stdout, proc.stdout

@@ -54,11 +54,17 @@ def test_plan_json_version_guard():
 
 def test_cover_free_backend_scored_once_per_depth():
     """'separable' execution ignores the line cover, so the planner must
-    not emit one (identical) candidate per cover option."""
+    not emit one (identical) candidate per cover option — at most one row
+    per (depth, block)."""
     p = api.plan(_problem(ss.star(2, 2, seed=1), steps=6))
-    for depth in {c.depth for c in p.candidates}:
-        assert sum(1 for c in p.candidates
-                   if c.backend == "separable" and c.depth == depth) == 1
+    depths = {c.depth for c in p.candidates}
+    blocks = {c.block for c in p.candidates}
+    assert depths and blocks
+    for depth in depths:
+        for block in blocks:
+            assert sum(1 for c in p.candidates
+                       if c.backend == "separable" and c.depth == depth
+                       and c.block == block) == 1
 
 
 def test_depth_one_plan_records_what_compile_executes():
@@ -90,7 +96,7 @@ def test_plan_round_trip_and_min_cost_property(draw):
     for c in p.candidates[:: max(1, len(p.candidates) // 3)]:
         again = candidate_cost(_problem(spec, grid=(n, n), boundary=boundary,
                                         steps=p.steps),
-                               c.depth, c.option, c.backend, block=p.block,
+                               c.depth, c.option, c.backend, block=c.block,
                                base_option=pin)
         assert again == c
 
@@ -99,8 +105,8 @@ def test_plan_explain_reports_decisions_and_costs():
     p = api.plan(_problem(ss.star(2, 2, seed=1), steps=8))
     text = p.explain()
     for needle in ("backend=", "cover=", "block=", "fuse=", "schedule=",
-                   "halo=", "t_compute", "t_traffic", "t_comm", "t/step",
-                   "<- chosen"):
+                   "halo=", "t_compute", "t_traffic", "t_comm", "t/model",
+                   "t/step", "<- chosen"):
         assert needle in text, f"explain() missing {needle!r}:\n{text}"
     # every displayed candidate row carries its modelled per-step cost
     ch = p.chosen()
@@ -163,7 +169,7 @@ def test_explain_works_without_the_plans_backends_registered():
     ghost = tuple(dc.replace(c, backend="some_unregistered_plugin")
                   for c in p.candidates[:2])
     q = dc.replace(p, candidates=p.candidates + ghost)
-    text = q.explain(top=30)
+    text = q.explain(top=len(q.candidates))
     assert "some_unregistered_plugin" in text
 
 

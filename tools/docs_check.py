@@ -1,0 +1,74 @@
+"""Execute README.md's marked code blocks so the docs cannot rot.
+
+A fenced ```python block immediately preceded by a line reading exactly
+``<!-- docs-check -->`` is executable documentation: this script runs all
+marked blocks IN ORDER in one shared namespace (the README reads as one
+narrative, so later blocks may use names the quickstart defined).  Any
+exception fails the check with the block's README position in the
+traceback.
+
+Run via ``make docs-check`` (wired next to ``make plan-report``) or:
+
+    PYTHONPATH=src python tools/docs_check.py [README.md ...]
+"""
+import os
+
+# Before jax initializes: the distributed example needs a multi-device
+# mesh, forced onto host platform devices exactly as tests/test_multidevice
+# does.  Must precede any import that pulls in jax.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import pathlib
+import sys
+
+MARKER = "<!-- docs-check -->"
+FENCE = "```python"
+
+
+def extract_marked_blocks(text: str, name: str) -> list[tuple[str, str]]:
+    """[(label, source)] for every marked fenced python block, in order."""
+    lines = text.splitlines()
+    blocks = []
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == MARKER:
+            j = i + 1
+            while j < len(lines) and not lines[j].strip():
+                j += 1
+            if j >= len(lines) or lines[j].strip() != FENCE:
+                raise SystemExit(f"{name}:{i + 1}: {MARKER} not followed by "
+                                 f"a {FENCE} fence")
+            k = j + 1
+            while k < len(lines) and lines[k].strip() != "```":
+                k += 1
+            if k >= len(lines):
+                raise SystemExit(f"{name}:{j + 1}: unterminated code fence")
+            # pad with blank lines so tracebacks carry true README line
+            # numbers
+            src = "\n" * (j + 1) + "\n".join(lines[j + 1:k])
+            blocks.append((f"{name}:{j + 2}", src))
+            i = k
+        i += 1
+    return blocks
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(__file__).resolve().parents[1]
+    paths = [pathlib.Path(a) for a in argv] or [root / "README.md"]
+    namespace: dict = {"__name__": "__docs_check__"}
+    total = 0
+    for path in paths:
+        blocks = extract_marked_blocks(path.read_text(), path.name)
+        if not blocks:
+            print(f"[docs-check] {path.name}: no marked blocks", flush=True)
+            continue
+        for label, src in blocks:
+            print(f"[docs-check] running {label}", flush=True)
+            exec(compile(src, str(path), "exec"), namespace)  # noqa: S102
+            total += 1
+    print(f"[docs-check] OK: {total} block(s) executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
