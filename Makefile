@@ -1,7 +1,7 @@
 # Canonical test entry points (see ROADMAP "Tier-1 verify").
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-slow bench-temporal plan-report docs-check
+.PHONY: test test-all test-slow bench-temporal bench-smoke plan-report docs-check
 
 # tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
 test:
@@ -17,6 +17,14 @@ test-slow:
 
 bench-temporal:
 	$(PY) benchmarks/bench_temporal.py
+
+# machine-readable perf trajectory: regenerates BENCH_plan.json (modelled
+# planner decision per PAPER_SUITE cell + calibrated factors) and
+# BENCH_temporal.json (fused-sweep wall-clock vs model) — run once per PR
+# so the repo records how the cost model and decisions drift over time.
+bench-smoke:
+	$(PY) benchmarks/bench_plan.py --json
+	$(PY) benchmarks/bench_temporal.py --json
 
 # planner decision record for the PAPER_SUITE on TPU_V5E; the tier-1 golden
 # test (tests/test_plan_golden.py) diffs this output against

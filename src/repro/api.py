@@ -29,8 +29,9 @@ from repro.core.engine import (Backend, StencilEngine, backend_names,
                                choose_cover, default_block, get_backend,
                                legal_covers, register_backend)
 from repro.core.planner import (CandidateCost, CompiledStencil, ExecutionPlan,
-                                PLAN_VERSION, StencilProblem, candidate_blocks,
-                                candidate_cost, compile_plan, plan)
+                                FUSE_STRATEGIES, PLAN_VERSION, StencilProblem,
+                                best_block, candidate_blocks, candidate_cost,
+                                compile_plan, plan)
 from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
                                      from_gather_coeffs, star)
 from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
@@ -42,7 +43,7 @@ compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
 __all__ = [
     "StencilProblem", "ExecutionPlan", "CandidateCost", "CompiledStencil",
     "plan", "compile", "compile_plan", "candidate_cost", "candidate_blocks",
-    "PLAN_VERSION",
+    "best_block", "FUSE_STRATEGIES", "PLAN_VERSION",
     "CalibrationRecord", "CandidateMeasurement", "calibrate",
     "measure_candidate",
     "StencilEngine", "Backend", "register_backend", "get_backend",

@@ -276,6 +276,7 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
                                    backend: str = "jnp",
                                    boundary: str = "periodic",
                                    block: tuple[int, ...] | None = None,
+                                   fuse_strategy: str = "operator",
                                    overlap: bool = True,
                                    interpret: bool = True) -> DistributedStepper:
     """Build the fused multi-device sweep: one ``t*r`` exchange per chunk.
@@ -284,9 +285,20 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
     10 steps at fuse depth 4) — the planner's ``ExecutionPlan.fuse_schedule``
     feeds straight in.  ``fused_option`` pins the cover of the deepest fused
     operator (remainder chunks re-cover automatically).
+
+    ``fuse_strategy="inkernel"`` swaps every depth-t chunk core for the
+    backend's in-kernel temporal-blocking sweep (T base steps per kernel
+    instance, VMEM-resident intermediates).  The exchange protocol is
+    untouched: the in-kernel core consumes exactly the same ``t*r``-deep
+    haloed block the fused operator would, so it still costs ONE exchange
+    per chunk, and the Dirichlet-0 strips re-evolve through the same
+    unfused base core.
     """
     if boundary not in ("periodic", "zero"):
         raise ValueError("distributed sweeps need boundary='periodic'|'zero'")
+    if fuse_strategy not in temporal.FUSE_STRATEGIES:
+        raise ValueError(f"unknown fuse strategy {fuse_strategy!r}; choose "
+                         f"from {temporal.FUSE_STRATEGIES}")
     schedule = tuple(int(t) for t in schedule)
     if any(t < 1 for t in schedule):
         raise ValueError(f"chunk depths must be >= 1, got {schedule}")
@@ -298,6 +310,9 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
     cores: dict[int, Callable] = {1: base._core}
     for t in sorted(set(schedule)):
         if t > 1:
+            if fuse_strategy == "inkernel":
+                cores[t] = base.inkernel_core(t)
+                continue
             opt = fused_option if t == depth_max else "auto"
             fused = StencilEngine(temporal.fuse_steps(spec, t), option=opt,
                                   backend=backend, block=base.plan.block,

@@ -120,6 +120,12 @@ class Backend:
     #                           None: the planner prices the backend by the
     #                           cover's mxu_flops; cover-free backends
     #                           supply their own (spec, block) -> flops
+    sweep_builder: Callable[..., Callable[[jnp.ndarray], jnp.ndarray]] | None = None
+    #                           (plan, steps, **opts) -> a T-step valid-mode
+    #                           core (shrinks each spatial axis by
+    #                           2*steps*order) executing fuse_strategy=
+    #                           "inkernel"; None: the backend only runs the
+    #                           operator-fusion strategy
 
     def effective_efficiency(self, compute_factors=None) -> float:
         """The backend's calibratable efficiency model.
@@ -146,6 +152,7 @@ def register_backend(name: str, builder: Callable, *,
                      supports: Callable[[StencilSpec], bool] | None = None,
                      uses_cover: bool = True,
                      flops_model: Callable | None = None,
+                     sweep_builder: Callable | None = None,
                      overwrite: bool = False) -> Backend:
     """Register a stencil execution backend.
 
@@ -161,6 +168,10 @@ def register_backend(name: str, builder: Callable, *,
     ignores the line cover (scored once per depth/block instead of once
     per cover); such backends usually supply ``flops_model(spec, block)``
     so the planner can price them without a cover.
+    ``sweep_builder(plan, steps, **opts)`` optionally supplies an in-kernel
+    temporal-blocking core (T base steps per call, shrinking each spatial
+    axis by ``2*steps*order``); registering one makes the backend eligible
+    for the planner's ``fuse_strategy="inkernel"`` candidates.
 
     Raises ``ValueError`` on duplicate names unless ``overwrite=True``.
     """
@@ -170,7 +181,8 @@ def register_backend(name: str, builder: Callable, *,
     be = Backend(name=name, builder=builder,
                  mxu_efficiency=float(mxu_efficiency),
                  supports=supports or (lambda spec: True),
-                 uses_cover=uses_cover, flops_model=flops_model)
+                 uses_cover=uses_cover, flops_model=flops_model,
+                 sweep_builder=sweep_builder)
     _BACKENDS[name] = be
     return be
 
@@ -206,12 +218,19 @@ def _pallas_builder(plan: StencilPlan, *, interpret: bool = True,
     return kops.pallas_backend_core(plan, interpret=interpret)
 
 
+def _pallas_sweep_builder(plan: StencilPlan, steps: int, *,
+                          interpret: bool = True, **_opts) -> Callable:
+    from repro.kernels import ops as kops
+    return kops.pallas_sweep_core(plan, steps, interpret=interpret)
+
+
 register_backend("jnp", _jnp_builder, mxu_efficiency=0.7)
 register_backend("separable", _separable_builder, mxu_efficiency=0.75,
                  supports=lambda spec: spec.ndim == 2, uses_cover=False,
                  flops_model=mx.separable_mxu_flops)
 register_backend("codegen", _codegen_builder, mxu_efficiency=0.8)
-register_backend("pallas", _pallas_builder, mxu_efficiency=0.9)
+register_backend("pallas", _pallas_builder, mxu_efficiency=0.9,
+                 sweep_builder=_pallas_sweep_builder)
 
 
 class StencilEngine:
@@ -249,6 +268,7 @@ class StencilEngine:
         self._fn = halo.wrap_boundary(self._core, spec.order, spec.ndim,
                                       boundary)
         self._fused_engines: dict[int, "StencilEngine"] = {}
+        self._inkernel_cores: dict[int, Callable] = {}
 
     @classmethod
     def from_execution_plan(cls, eplan, interpret: bool = True) -> "StencilEngine":
@@ -282,73 +302,132 @@ class StencilEngine:
         return jax.lax.fori_loop(0, steps, lambda _, a: fn(a), x)
 
     # -- fused temporal sweep (paper §6 made executable) ---------------------
-    def _resolve_depth(self, steps: int, fuse: int | str) -> int:
-        # fuse="auto" here uses temporal.choose_fuse_depth — DELIBERATELY a
-        # simpler model than the planner's (block-level compute/traffic
-        # only; no grid, backend efficiency, ICI, or strip surcharge,
-        # none of which the engine has context for).  The full model and
-        # decision record live in repro.api.plan; a planned depth is
-        # honoured exactly because compile() passes it as an explicit
-        # schedule and never re-enters this chooser.
+    def _legal_strategies(self) -> tuple[str, ...]:
+        return (temporal.FUSE_STRATEGIES if self.supports_inkernel
+                else ("operator",))
+
+    def _strategy_set(self, strategy: str) -> tuple[str, ...]:
+        """Validate a strategy pin and return the strategies to search."""
+        if strategy == "auto":
+            return self._legal_strategies()
+        if strategy not in temporal.FUSE_STRATEGIES:
+            raise ValueError(f"unknown fuse strategy {strategy!r}; choose "
+                             f"from {temporal.FUSE_STRATEGIES + ('auto',)}")
+        if strategy == "inkernel" and not self.supports_inkernel:
+            raise ValueError(
+                f"backend {self.plan.backend!r} registers no sweep_builder; "
+                f"fuse_strategy='inkernel' needs one (see register_backend)")
+        return (strategy,)
+
+    def _resolve(self, steps: int, fuse: int | str, strategy: str,
+                 grid: tuple[int, ...] | None = None) -> tuple[int, str]:
+        """Fix the (chunk depth, strategy) pair for a sweep.
+
+        fuse="auto" uses temporal.choose_fuse_depth — DELIBERATELY a
+        simpler model than the planner's (block-level compute/traffic
+        only; no grid, backend efficiency, ICI, or strip surcharge,
+        none of which the engine has context for).  The full model and
+        decision record live in repro.api.plan; a planned depth is
+        honoured exactly because compile() passes it as an explicit
+        schedule and never re-enters this chooser.
+
+        The depth search is RESTRICTED to the strategies the pin allows
+        (a pinned strategy must never execute at a depth tuned for the
+        other one), and with everything "auto" one chooser call decides
+        both; ``grid`` caps the depth by shape/boundary first.
+        """
+        strategies = self._strategy_set(strategy)
+        chosen = None
         if fuse == "auto":
-            return temporal.choose_fuse_depth(
-                self.plan.spec, steps, self.plan.block).depth
-        depth = int(fuse)
-        if depth < 1:
-            raise ValueError(f"fuse depth must be >= 1, got {fuse}")
-        return depth
+            dec = temporal.choose_fuse_depth(self.plan.spec, steps,
+                                             self.plan.block,
+                                             strategies=strategies)
+            depth, chosen = dec.depth, dec.strategy
+        else:
+            depth = int(fuse)
+            if depth < 1:
+                raise ValueError(f"fuse depth must be >= 1, got {fuse}")
+        capped = depth if grid is None else min(
+            depth, max(steps, 1), self.max_fuse_depth(grid))
+        if strategy != "auto":
+            return capped, strategy
+        if chosen is not None and capped == depth:
+            return capped, chosen
+        if capped <= 1 or "inkernel" not in strategies:
+            return capped, "operator"
+        dec = temporal.choose_fuse_depth(self.plan.spec, capped,
+                                         self.plan.block, max_depth=capped,
+                                         strategies=strategies)
+        return capped, dec.candidate(capped).strategy
 
     def sweep(self, x: jnp.ndarray, steps: int,
-              fuse: int | str = "auto") -> jnp.ndarray:
+              fuse: int | str = "auto",
+              strategy: str = "auto") -> jnp.ndarray:
         """Advance ``steps`` applications via fused multi-step sweeps.
 
-        Each chunk of ``T`` steps executes as ONE application of the T-fold
-        self-correlated operator (``temporal.fuse_steps``), re-planned
-        through this engine's backend — cover selection and the Pallas
-        kernel plan are rebuilt for the fused higher-order spec.  HBM
+        Each chunk of ``T`` steps executes as ONE pass over the grid; HBM
         traffic per chunk drops ~T-fold (``temporal.fused_traffic_ratio``)
-        at the cost of more MXU work; ``fuse="auto"`` picks T with the
-        roofline model (``temporal.choose_fuse_depth``).
+        either way, and ``strategy`` picks how the chunk computes:
+
+        * ``"operator"`` — ONE application of the T-fold self-correlated
+          operator (``temporal.fuse_steps``), re-planned through this
+          engine's backend: cover selection and the Pallas kernel plan are
+          rebuilt for the fused higher-order spec (flops grow
+          ``(2Tr+1)``-dense).
+        * ``"inkernel"`` — T applications of the BASE operator inside one
+          kernel instance with VMEM-resident intermediates (the backend's
+          registered ``sweep_builder``; flops stay linear in T).
+        * ``"auto"`` — the roofline model picks per chunk depth;
+          ``fuse="auto"`` additionally picks T (``choose_fuse_depth``).
 
         Boundary semantics match ``steps`` sequential applications exactly:
         'valid' (total shrink ``order*steps``) and 'periodic' compose
         exactly; 'zero' fuses the interior and splices sequentially-computed
         strips of width ``order*T`` at the boundary, where per-step
-        clamping is not expressible as a single correlation.
+        clamping is not expressible as a single correlation (both
+        strategies share the same strip fixup).
         """
         if steps < 0:
             raise ValueError("steps >= 0")
         if steps == 0:
             return x
-        depth = self._resolve_depth(steps, fuse)
         grid = x.shape[x.ndim - self.plan.spec.ndim:]
-        depth = min(depth, steps, self.max_fuse_depth(grid))
+        depth, strategy = self._resolve(steps, fuse, strategy, grid)
         for t in temporal.fuse_schedule(steps, depth):
-            x = self._apply_chunk(x, t)
+            x = self._apply_chunk(x, t, strategy)
         return x
 
     def sweep_fn(self, steps: int, fuse: int | str = "auto",
-                 grid: tuple[int, ...] | None = None
+                 grid: tuple[int, ...] | None = None,
+                 strategy: str = "auto"
                  ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """jit-safe closure over :meth:`sweep` with a static step count.
 
-        The fuse depth (``fuse="auto"`` included) is resolved HERE, at
-        closure-build time — not inside traced code — so ``jax.jit`` of the
-        result traces a fixed chunk schedule and compiles exactly once per
-        input shape.  Passing ``grid`` (the spatial extents) additionally
-        freezes the shape-capped schedule and pre-builds the fused engines
-        eagerly, so the first jitted call does no planning work at all.
+        The fuse depth and strategy (``"auto"`` included) are resolved
+        HERE, at closure-build time — not inside traced code — so
+        ``jax.jit`` of the result traces a fixed chunk schedule and
+        compiles exactly once per input shape.  Passing ``grid`` (the
+        spatial extents) additionally freezes the shape-capped schedule and
+        pre-builds the fused engines / in-kernel cores eagerly, so the
+        first jitted call does no planning work at all.
         """
         if steps < 0:
             raise ValueError("steps >= 0")
-        depth = self._resolve_depth(steps, fuse) if steps else 1
+        if steps:
+            depth, strategy = self._resolve(
+                steps, fuse, strategy,
+                tuple(grid) if grid is not None else None)
+        else:
+            depth, strategy = 1, "operator"
         schedule: list[int] | None = None
         if grid is not None:
-            cap = min(depth, max(steps, 1), self.max_fuse_depth(tuple(grid)))
-            schedule = temporal.fuse_schedule(steps, cap)
+            schedule = temporal.fuse_schedule(steps, depth)
             for t in set(schedule):
                 if t > 1:
-                    self.fused_engine(t)
+                    if strategy == "inkernel":
+                        self.inkernel_core(t)
+                    else:
+                        self.fused_engine(t)
 
         def fn(x: jnp.ndarray) -> jnp.ndarray:
             if steps == 0:
@@ -359,7 +438,7 @@ class StencilEngine:
                 sched = temporal.fuse_schedule(
                     steps, min(depth, steps, self.max_fuse_depth(g)))
             for t in sched:
-                x = self._apply_chunk(x, t)
+                x = self._apply_chunk(x, t, strategy)
             return x
 
         return fn
@@ -387,30 +466,65 @@ class StencilEngine:
             self._fused_engines[t] = eng
         return eng
 
-    def _apply_chunk(self, x: jnp.ndarray, t: int) -> jnp.ndarray:
+    @property
+    def supports_inkernel(self) -> bool:
+        """Whether this engine's backend registers an in-kernel sweep."""
+        return get_backend(self.plan.backend).sweep_builder is not None
+
+    def inkernel_core(self, t: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """The backend's t-step in-kernel temporal-blocking core (cached).
+
+        A valid-mode callable shrinking each spatial axis by ``2*t*order``
+        — the exact contract of the t-fused operator's core, so the halo
+        layer, the Dirichlet-0 strip splice, and the distributed deep-halo
+        protocol drive either interchangeably.
+        """
+        core = self._inkernel_cores.get(t)
+        if core is None:
+            be = get_backend(self.plan.backend)
+            if be.sweep_builder is None:
+                raise ValueError(
+                    f"backend {self.plan.backend!r} registers no "
+                    f"sweep_builder; fuse_strategy='inkernel' needs one")
+            core = be.sweep_builder(self.plan, t, interpret=self.interpret)
+            self._inkernel_cores[t] = core
+        return core
+
+    def _chunk_fn(self, t: int,
+                  strategy: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """Shape-preserving t-step chunk update (boundary-lifted)."""
+        if strategy == "inkernel":
+            spec = self.plan.spec
+            return halo.wrap_boundary(self.inkernel_core(t), t * spec.order,
+                                      spec.ndim, self.plan.boundary)
+        return self.fused_engine(t)._fn
+
+    def _apply_chunk(self, x: jnp.ndarray, t: int,
+                     strategy: str = "operator") -> jnp.ndarray:
         if t == 1:
             return self._fn(x)
-        fused = self.fused_engine(t)
+        chunk_fn = self._chunk_fn(t, strategy)
         if self.plan.boundary == "zero":
-            return self._zero_boundary_chunk(x, t, fused)
-        return fused._fn(x)
+            return self._zero_boundary_chunk(x, t, chunk_fn)
+        return chunk_fn(x)
 
     def _zero_boundary_chunk(self, x: jnp.ndarray, t: int,
-                             fused: "StencilEngine") -> jnp.ndarray:
+                             chunk_fn: Callable) -> jnp.ndarray:
         """Fused interior + sequential Dirichlet-0 boundary strips.
 
-        The fused operator equals the zero-EXTENDED evolution, which matches
-        per-step clamping only at distance >= t*r from the boundary.  Each
-        boundary strip of output width ``t*r`` is recomputed by ``t``
-        unfused steps over a ``2*t*r``-deep input strip: zero-padded on true
-        boundaries (outer side + every other axis), valid-shrunk on the
-        interior side, so the strip values are exactly the sequential ones.
+        The fused chunk (either strategy) equals the zero-EXTENDED
+        evolution, which matches per-step clamping only at distance >= t*r
+        from the boundary.  Each boundary strip of output width ``t*r`` is
+        recomputed by ``t`` unfused steps over a ``2*t*r``-deep input strip:
+        zero-padded on true boundaries (outer side + every other axis),
+        valid-shrunk on the interior side, so the strip values are exactly
+        the sequential ones.
         """
         spec = self.plan.spec
         r, nd = spec.order, spec.ndim
         rt = r * t
         lead = x.ndim - nd
-        y = fused._fn(x)
+        y = chunk_fn(x)
         core = self._core
         for a in range(nd):
             axis = lead + a

@@ -40,8 +40,20 @@ __all__ = [
     "matmul_count",
     "mxu_flops",
     "separable_mxu_flops",
+    "inkernel_mxu_flops",
+    "inkernel_hbm_bytes",
+    "inkernel_vmem_bytes",
     "block_hbm_bytes",
+    "VMEM_BYTES",
+    "VMEM_BUDGET",
 ]
+
+# v5e/v5p VMEM per core, and the fraction of it a kernel instance's tile
+# residency may claim (the rest is Toeplitz operators + slack).  Shared by
+# the planner's block search / inkernel pruning AND the engine-level
+# temporal chooser, so the two layers can never disagree on feasibility.
+VMEM_BYTES = 16 * 2 ** 20
+VMEM_BUDGET = 0.5 * VMEM_BYTES
 
 
 def toeplitz_band_np(band: np.ndarray, n_out: int) -> np.ndarray:
@@ -233,6 +245,62 @@ def separable_mxu_flops(spec: StencilSpec, block: tuple[int, ...]) -> int:
     per_factor = (2 * n_i * (n_i + 2 * r) * (n_j + 2 * r)
                   + 2 * n_i * (n_j + 2 * r) * n_j)
     return rank * per_factor
+
+
+def inkernel_mxu_flops(cover: LineCover, block: tuple[int, ...],
+                       steps: int) -> int:
+    """MXU flops for ``steps`` in-kernel temporally-blocked applications of
+    the BASE cover producing one output block (fuse_strategy="inkernel").
+
+    Step ``s`` applies the base operator over the live slab of extent
+    ``block + 2*(steps-1-s)*r`` per axis (the halo shrinks by ``r`` per side
+    per step), so total work is ``sum_s mxu_flops(cover, live extent)`` —
+    linear in T times the base ``(2r+1)``-dense cost plus the shrinking-halo
+    overhead, versus the operator-fused ``(2Tr+1)``-dense growth.
+    """
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    r = cover.spec.order
+    total = 0
+    for s in range(steps):
+        ext = tuple(b + 2 * (steps - 1 - s) * r for b in block)
+        total += mxu_flops(cover, ext)
+    return total
+
+
+def inkernel_hbm_bytes(block: tuple[int, ...], steps: int, order: int,
+                       dtype_bytes: int = 4) -> float:
+    """HBM bytes for one in-kernel T-step chunk of one block: the
+    ``T*r``-haloed read plus one write-back — intermediates stay in VMEM,
+    so this equals the operator-fused chunk's traffic exactly."""
+    return block_hbm_bytes(block, steps * order, dtype_bytes)
+
+
+def inkernel_vmem_bytes(block: tuple[int, ...], steps: int, order: int,
+                        dtype_bytes: int = 4,
+                        cover: LineCover | None = None) -> float:
+    """VMEM residency of one in-kernel chunk instance: the ``T*r``-deep
+    input slab + the output tile (at the problem dtype), the
+    double-buffered f32 scratch pair at the deepest intermediate extent,
+    and — when the ``cover`` is known — every step's stacked banded
+    Toeplitz operators (all are broadcast kernel inputs, resident
+    simultaneously, and can dominate at large blocks).  The planner's and
+    the temporal chooser's shared feasibility bound for
+    fuse_strategy="inkernel"."""
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    slab = float(np.prod([b + 2 * steps * order for b in block]))
+    buf = float(np.prod([b + 2 * (steps - 1) * order for b in block]))
+    out = float(np.prod(block))
+    ops = 0.0
+    if cover is not None:
+        for line in cover.lines:
+            if line.is_diagonal or line.nnz <= 1:
+                continue
+            for s in range(steps):
+                n = block[line.axis] + 2 * (steps - 1 - s) * order
+                ops += n * (n + 2 * order)
+    return dtype_bytes * (slab + out) + 4 * (2 * buf + ops)
 
 
 def block_hbm_bytes(block: tuple[int, ...], halo_width: int,

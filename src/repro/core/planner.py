@@ -11,12 +11,19 @@ cost, renders the full cost table via :meth:`ExecutionPlan.explain`, and
 compiles to a jit-ready executable with :func:`compile_plan`.
 
 Decisions recorded per plan:
-  * ``option``       — coefficient-line cover of the (fused) operator
+  * ``option``       — coefficient-line cover of the (fused) operator; for
+    ``fuse_strategy="inkernel"`` the cover of the BASE operator, applied at
+    every in-kernel step
   * ``base_option``  — cover of the unfused operator (remainder chunks,
     Dirichlet-0 strip fixups)
   * ``backend``      — an entry of the engine's backend registry
   * ``block``        — output tile (the paper's §4.3 in-core block)
   * ``fuse_depth`` / ``fuse_schedule`` — temporal chunking (paper §6)
+  * ``fuse_strategy`` — "operator" (compose T steps into one radius-``T*r``
+    stencil, flops ``(2Tr+1)``-dense) | "inkernel" (T base-radius steps per
+    kernel instance with VMEM-resident intermediates, flops linear in T;
+    only for backends registering a ``sweep_builder``).  Both strategies
+    carry the same 1-read/1-write-per-chunk HBM traffic
   * ``halo_strategy`` — "none" (valid) | "pad" (single device) |
     "exchange" (mesh: ONE ``T*r``-deep exchange per fused chunk)
   * ``sharding``     — mesh shape/axes + grid axis mapping
@@ -72,9 +79,12 @@ from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
 __all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
            "CompiledStencil", "plan", "compile_plan", "candidate_cost",
-           "candidate_blocks", "PLAN_VERSION"]
+           "candidate_blocks", "best_block", "factor_key",
+           "FUSE_STRATEGIES", "PLAN_VERSION"]
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
+
+FUSE_STRATEGIES = temporal.FUSE_STRATEGIES
 
 
 # ---------------------------------------------------------------------------
@@ -176,13 +186,17 @@ class StencilProblem:
 
 @dataclasses.dataclass(frozen=True)
 class CandidateCost:
-    """Roofline model of one (fuse depth, cover, backend, block) candidate.
+    """Roofline model of one (fuse depth, strategy, cover, backend, block)
+    candidate.
 
     ``t_compute`` / ``t_traffic`` / ``t_comm`` are the CALIBRATED seconds
     per fused sweep (equal to the raw modelled terms when the plan carries
     no calibration); ``t_per_step`` ranks the table.  ``t_model`` always
     holds the uncalibrated per-step score, so a calibrated plan renders
-    modelled-vs-measured drift per row.
+    modelled-vs-measured drift per row.  ``strategy`` is the temporal
+    execution of the chunk ("operator" fused-operator flops, "inkernel"
+    linear-in-T flops; for "inkernel" rows ``option`` names the BASE
+    cover applied at every step).
     """
     depth: int
     option: str
@@ -196,11 +210,13 @@ class CandidateCost:
     t_comm: float
     t_model: float          # UNcalibrated max(compute, traffic, comm)/depth
     t_per_step: float       # calibrated max(compute, traffic, comm) / depth
+    strategy: str = "operator"
 
     @property
     def key(self) -> tuple:
         """Identity of the decision this row prices (table join key)."""
-        return (self.depth, self.option, self.backend, self.block)
+        return (self.depth, self.option, self.backend, self.block,
+                self.strategy)
 
 
 def _n_blocks(local_grid: Sequence[int], block: Sequence[int]) -> int:
@@ -223,17 +239,44 @@ def _selection_key(c: CandidateCost):
     backend, then lexicographic."""
     return (c.t_per_step, (c.t_compute + c.t_traffic + c.t_comm) / c.depth,
             -_backend_efficiency(c.backend),
-            c.depth, c.option, c.backend, c.block)
+            c.depth, c.strategy, c.option, c.backend, c.block)
 
 
-def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
+def factor_key(backend: str, strategy: str = "operator") -> str:
+    """Calibration factor-table key for a (backend, fuse strategy) pair.
+
+    THE single definition of the key format — ``launch.calibrate`` builds
+    records with it and :func:`_calib_factor` reads them with it.
+    Operator-strategy factors keep the bare backend name (the historical
+    per-backend meaning, and the fallback applied when no
+    strategy-specific factor was measured); other strategies are keyed
+    ``"backend:strategy"`` so the execution paths calibrate independently.
+    """
+    return backend if strategy == "operator" else f"{backend}:{strategy}"
+
+
+def _calib_factor(table: Mapping, backend: str, strategy: str):
+    """Measured factor for a (backend, strategy), falling back to the
+    backend-wide (operator) factor when no strategy-specific one exists."""
+    key = factor_key(backend, strategy)
+    if key in table:
+        return table.get(key)
+    return table.get(backend)
+
+
+def _candidate(spec: StencilSpec, fspec: StencilSpec | None, depth: int,
                option: str, cover: cl.LineCover, backend: str,
                block: tuple[int, ...], local_grid: tuple[int, ...],
                sharded_axes: Sequence[int], boundary: str,
                base_flops: float, dtype_bytes: int, hw,
-               calib: Mapping | None = None) -> CandidateCost:
+               calib: Mapping | None = None,
+               strategy: str = "operator") -> CandidateCost:
     be = get_backend(backend)
-    if be.flops_model is not None:
+    if strategy == "inkernel":
+        # T base-radius steps in VMEM: flops linear in T (plus the
+        # shrinking-halo overhead); ``cover`` is the BASE cover here.
+        flops_block = mx.inkernel_mxu_flops(cover, block, depth)
+    elif be.flops_model is not None:
         flops_block = be.flops_model(fspec, block)
     else:
         flops_block = mx.mxu_flops(cover, block)
@@ -243,10 +286,13 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
         # Dirichlet-0 strip fixups: 2 strips per axis, each re-evolved by
         # `depth` unfused steps over a 3*T*r-deep slab (see
         # distributed.distributed_fused_chunk) — modelled as that fraction
-        # of `depth` full unfused sweeps.
+        # of `depth` full unfused sweeps.  Both strategies share the fixup.
         frac = min(1.0, 3 * depth * spec.order / min(local_grid))
         flops += 2 * spec.ndim * depth * frac * base_flops
-    bytes_hbm = mx.block_hbm_bytes(block, fspec.order, dtype_bytes) * nb
+    # one T*r-deep haloed read + one write per chunk — identical traffic
+    # for both strategies (in-kernel intermediates never touch HBM)
+    bytes_hbm = mx.block_hbm_bytes(block, depth * spec.order,
+                                   dtype_bytes) * nb
     ici = 0.0
     for a in sharded_axes:
         face = float(np.prod([g for i, g in enumerate(local_grid) if i != a]))
@@ -255,14 +301,16 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
     t_traffic_raw = bytes_hbm / hw.hbm_bw
     t_comm = ici / hw.ici_bw if ici else 0.0
     if calib is not None:
-        eff = be.effective_efficiency(calib.get("compute"))
+        cfac = _calib_factor(calib.get("compute", {}), backend, strategy)
+        eff = be.effective_efficiency(
+            {backend: cfac} if cfac is not None else None)
         t_compute = flops / (hw.peak_flops_bf16 * eff)
-        t_traffic = t_traffic_raw * float(
-            calib.get("traffic", {}).get(backend, 1.0))
+        tfac = _calib_factor(calib.get("traffic", {}), backend, strategy)
+        t_traffic = t_traffic_raw * float(1.0 if tfac is None else tfac)
     else:
         t_compute, t_traffic = t_compute_raw, t_traffic_raw
     return CandidateCost(depth=depth, option=option, backend=backend,
-                         block=tuple(block),
+                         block=tuple(block), strategy=strategy,
                          mxu_flops=flops, hbm_bytes=bytes_hbm, ici_bytes=ici,
                          t_compute=t_compute, t_traffic=t_traffic,
                          t_comm=t_comm,
@@ -275,9 +323,10 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec, depth: int,
 # Block search (DESIGN.md §Autotune)
 # ---------------------------------------------------------------------------
 
-_VMEM_BYTES = 16 * 2 ** 20   # v5e/v5p VMEM per core
-_VMEM_BUDGET = 0.5 * _VMEM_BYTES   # haloed read + output tile resident;
-#                                    the rest is Toeplitz operators + slack
+# haloed read + output tile resident; shared with the temporal chooser
+# (see matrixization.VMEM_BUDGET)
+_VMEM_BYTES = mx.VMEM_BYTES
+_VMEM_BUDGET = mx.VMEM_BUDGET
 
 # Per-axis aligned extents: the minormost axis stays a multiple of the
 # 128-wide lane dimension, the second-to-minor of the 8-deep sublane; the
@@ -288,6 +337,43 @@ _ALIGNED_EXTENTS = {
     2: ((32, 64, 128, 256, 512), (128, 256)),
     3: ((4, 8, 16, 32, 64), (32, 64, 128), (128, 256)),
 }
+
+
+def _ranked_blocks(spec: StencilSpec, local_grid: Sequence[int],
+                   hw, dtype_bytes: int, halo_width: int | None
+                   ) -> tuple[list[tuple[int, ...]], tuple[int, ...]]:
+    """Shared enumeration for :func:`candidate_blocks` / :func:`best_block`:
+    (every feasible aligned tile in roofline-score order — best first,
+    the clipped default block)."""
+    nd = spec.ndim
+    r = spec.order
+    if halo_width is None:
+        halo_width = r
+    default = tuple(min(b, int(g)) for b, g in
+                    zip(default_block(spec), local_grid))
+    extents = _ALIGNED_EXTENTS.get(nd)
+    if extents is None:               # ndim > 3: no aligned table, no search
+        return [default], default
+    sizes = [sorted({min(int(s), int(g)) for s in ext} | {d})
+             for ext, g, d in zip(extents, local_grid, default)]
+    blocks = {tuple(b) for b in itertools.product(*sizes)}
+    blocks.add(default)
+
+    bytes_of = {blk: mx.block_hbm_bytes(blk, halo_width, dtype_bytes)
+                for blk in blocks}
+    feasible = sorted(b for b in blocks
+                      if bytes_of[b] <= _VMEM_BUDGET) or [default]
+    covers = [cl.make_cover(spec, o) for o in legal_covers(spec)]
+
+    def score(blk):
+        flops = min(mx.mxu_flops(cover, blk) for cover in covers)
+        if nd == 2:
+            flops = min(flops, mx.separable_mxu_flops(spec, blk))
+        t_c = flops / hw.peak_flops_bf16
+        t_t = bytes_of[blk] / hw.hbm_bw
+        return max(t_c, t_t) / float(np.prod(blk))
+
+    return sorted(feasible, key=lambda b: (score(b), b)), default
 
 
 def candidate_blocks(spec: StencilSpec, local_grid: Sequence[int],
@@ -313,39 +399,25 @@ def candidate_blocks(spec: StencilSpec, local_grid: Sequence[int],
     """
     if hw is None:
         hw = _default_hw()
-    nd = spec.ndim
-    r = spec.order
-    if halo_width is None:
-        halo_width = r
-    default = tuple(min(b, int(g)) for b, g in
-                    zip(default_block(spec), local_grid))
-    extents = _ALIGNED_EXTENTS.get(nd)
-    if extents is None:               # ndim > 3: no aligned table, no search
-        return [default]
-    sizes = [sorted({min(int(s), int(g)) for s in ext} | {d})
-             for ext, g, d in zip(extents, local_grid, default)]
-    blocks = {tuple(b) for b in itertools.product(*sizes)}
-    blocks.add(default)
-
-    bytes_of = {blk: mx.block_hbm_bytes(blk, halo_width, dtype_bytes)
-                for blk in blocks}
-    feasible = sorted(b for b in blocks
-                      if bytes_of[b] <= _VMEM_BUDGET) or [default]
-    covers = [cl.make_cover(spec, o) for o in legal_covers(spec)]
-
-    def score(blk):
-        flops = min(mx.mxu_flops(cover, blk) for cover in covers)
-        if nd == 2:
-            flops = min(flops, mx.separable_mxu_flops(spec, blk))
-        t_c = flops / hw.peak_flops_bf16
-        t_t = bytes_of[blk] / hw.hbm_bw
-        return max(t_c, t_t) / float(np.prod(blk))
-
-    ranked = sorted(feasible, key=lambda b: (score(b), b))
+    ranked, default = _ranked_blocks(spec, local_grid, hw, dtype_bytes,
+                                     halo_width)
     keep = ranked[:max(1, int(max_blocks))]
     if default not in keep:
         keep[-1] = default
     return sorted(keep)
+
+
+def best_block(spec: StencilSpec, local_grid: Sequence[int],
+               hw=None, dtype_bytes: int = 4, *,
+               halo_width: int | None = None) -> tuple[int, ...]:
+    """The top-ranked tile of the block search (the kernel wrappers'
+    default when no block is pinned — see ``kernels.ops``): the same
+    enumeration and roofline pruning as :func:`candidate_blocks`, returning
+    the best-scoring tile instead of the sorted shortlist."""
+    if hw is None:
+        hw = _default_hw()
+    ranked, _ = _ranked_blocks(spec, local_grid, hw, dtype_bytes, halo_width)
+    return ranked[0]
 
 
 # ---------------------------------------------------------------------------
@@ -367,12 +439,14 @@ class ExecutionPlan:
     problem: dict
     hw: dict
     option: str            # cover of the fused operator at fuse_depth
+    #                        (BASE cover when fuse_strategy="inkernel")
     base_option: str       # cover of the unfused operator
     backend: str
     block: tuple[int, ...]
     unroll: tuple[int, ...]
     fuse_depth: int
     fuse_schedule: tuple[int, ...]
+    fuse_strategy: str     # "operator" | "inkernel"
     halo_strategy: str     # "none" | "pad" | "exchange"
     halo_width: int
     sharding: dict | None
@@ -403,7 +477,7 @@ class ExecutionPlan:
     def chosen(self) -> CandidateCost:
         for c in self.candidates:
             if c.key == (self.fuse_depth, self.option, self.backend,
-                         self.block):
+                         self.block, self.fuse_strategy):
                 return c
         raise KeyError("chosen candidate missing from the cost table")
 
@@ -451,13 +525,15 @@ class ExecutionPlan:
         """Human-readable decision record with the modelled cost table.
 
         Column meanings (one row per enumerated candidate, best first):
-        ``depth`` fused-chunk length T, ``cover`` coefficient-line cover of
-        the T-fused operator, ``backend`` registry entry, ``block`` output
-        tile the row was scored at, ``t_compute``/``t_traffic``/``t_comm``
-        calibrated roofline seconds per fused sweep, ``t/model`` the
-        UNcalibrated per-step score, ``t/step`` the calibrated per-step
-        score the ranking minimizes (the two columns coincide when the plan
-        carries no calibration).
+        ``depth`` fused-chunk length T, ``strat`` temporal strategy of the
+        chunk ("operator" fused-operator | "inkernel" T VMEM-resident base
+        steps), ``cover`` coefficient-line cover of the T-fused operator
+        (of the BASE operator for inkernel rows), ``backend`` registry
+        entry, ``block`` output tile the row was scored at,
+        ``t_compute``/``t_traffic``/``t_comm`` calibrated roofline seconds
+        per fused sweep, ``t/model`` the UNcalibrated per-step score,
+        ``t/step`` the calibrated per-step score the ranking minimizes (the
+        two columns coincide when the plan carries no calibration).
         """
         p = self.problem
         spec = self.spec
@@ -475,7 +551,8 @@ class ExecutionPlan:
             f"{self.hw['ici_bw'] / 1e9:.0f} GB/s ICI",
             f"chosen: backend={self.backend} cover={self.option} "
             f"(base {self.base_option}) block={self.block} "
-            f"fuse={self.fuse_depth} schedule={self.schedule_str()} "
+            f"fuse={self.fuse_depth} strategy={self.fuse_strategy} "
+            f"schedule={self.schedule_str()} "
             f"halo={self.halo_strategy} width={self.halo_width}",
             f"{'modelled' if self.calibration is None else 'calibrated'}"
             f"/step: compute {ch.t_compute / ch.depth:.3e}s, "
@@ -491,16 +568,17 @@ class ExecutionPlan:
             lines.append(f"calibrated ({cal.get('hw', '?')} measured, "
                          f"compute/traffic factors): {facts}")
         lines.append(
-            "  rank depth cover       backend     block        t_compute   "
-            "t_traffic   t_comm      t/model     t/step")
+            "  rank depth strat    cover       backend     block        "
+            "t_compute   t_traffic   t_comm      t/model     t/step")
         ranked = self.ranked()
         for i, c in enumerate(ranked[:top]):
             mark = "  <- chosen" if c.key == (
-                self.fuse_depth, self.option, self.backend, self.block) \
-                else ""
+                self.fuse_depth, self.option, self.backend, self.block,
+                self.fuse_strategy) else ""
             blk = "x".join(str(b) for b in c.block)
             lines.append(
-                f"  {i + 1:4d} {c.depth:5d} {c.option:<11s} {c.backend:<11s} "
+                f"  {i + 1:4d} {c.depth:5d} {c.strategy:<8s} "
+                f"{c.option:<11s} {c.backend:<11s} "
                 f"{blk:<12s} "
                 f"{c.t_compute:.3e}   {c.t_traffic:.3e}   {c.t_comm:.3e}   "
                 f"{c.t_model:.3e}   {c.t_per_step:.3e}{mark}")
@@ -577,19 +655,23 @@ def plan(problem: StencilProblem, hw=None, *,
          backends: Sequence[str] | None = None,
          option: str | None = None,
          fuse: int | None = None,
+         fuse_strategy: str | None = None,
          block: tuple[int, ...] | None = None,
          max_depth: int = 4,
          max_blocks: int = 4,
          calibration=None) -> ExecutionPlan:
-    """Enumerate (cover x backend x fuse x block) candidates, pick the
-    min-cost one.
+    """Enumerate (cover x backend x fuse x block x strategy) candidates,
+    pick the min-cost one.
 
-    ``option`` / ``backends`` / ``fuse`` / ``block`` pin a decision instead
-    of searching it (the pinned value still gets its cost modelled and
-    recorded).  A pinned ``option`` constrains the UNFUSED operator; fused
-    operators are re-covered per depth, exactly as the engine's sweep does.
-    Without a ``block`` pin the search scores every tile from
-    :func:`candidate_blocks` (at most ``max_blocks`` of them).
+    ``option`` / ``backends`` / ``fuse`` / ``fuse_strategy`` / ``block``
+    pin a decision instead of searching it (the pinned value still gets its
+    cost modelled and recorded).  A pinned ``option`` constrains the
+    UNFUSED operator; fused operators are re-covered per depth, exactly as
+    the engine's sweep does (inkernel candidates keep the base cover — it
+    is applied at every in-kernel step).  Without a ``block`` pin the
+    search scores every tile from :func:`candidate_blocks` (at most
+    ``max_blocks`` of them); inkernel candidates are additionally pruned by
+    the deep-slab VMEM residency (``matrixization.inkernel_vmem_bytes``).
 
     ``calibration`` re-ranks the table with measured per-backend factors
     (a :class:`repro.launch.calibrate.CalibrationRecord` or an equivalent
@@ -608,6 +690,18 @@ def plan(problem: StencilProblem, hw=None, *,
     if option is not None and option not in cl.COVER_OPTIONS:
         raise ValueError(f"unknown cover option {option!r}; choose from "
                          f"{list(cl.COVER_OPTIONS)}")
+    if fuse_strategy is not None and fuse_strategy not in FUSE_STRATEGIES:
+        raise ValueError(f"unknown fuse strategy {fuse_strategy!r}; choose "
+                         f"from {FUSE_STRATEGIES}")
+    strategies = (FUSE_STRATEGIES if fuse_strategy is None
+                  else (fuse_strategy,))
+    if fuse_strategy == "inkernel" and not any(
+            get_backend(nm).sweep_builder is not None
+            and get_backend(nm).supports(problem.spec) for nm in names):
+        raise ValueError(
+            f"fuse_strategy='inkernel' pinned but no backend in {names} "
+            f"registers a sweep_builder supporting this spec "
+            f"(see register_backend)")
 
     local_grid = problem.local_grid()
     sharded_axes = _sharded_axes(problem)
@@ -635,40 +729,72 @@ def plan(problem: StencilProblem, hw=None, *,
         depths = list(range(1, min(feasible, max_depth) + 1))
 
     fused_specs: dict[int, StencilSpec] = {1: spec}
+    base_opts = [option] if option else legal_covers(spec)
+    base_covers = {opt: cl.make_cover(spec, opt) for opt in base_opts}
     cands: list[CandidateCost] = []
     for t in depths:
-        fspec = fused_specs.get(t)
-        if fspec is None:
-            fspec = temporal.fuse_steps(spec, t)
-            fused_specs[t] = fspec
-        if t == 1 and option:
-            opts = [option]
-        else:
-            opts = legal_covers(fspec)
-        for oi, opt in enumerate(opts):
-            cover = cl.make_cover(fspec, opt)
-            for nm in names:
-                be = get_backend(nm)
-                if not be.supports(fspec):
-                    continue
-                if not be.uses_cover and oi > 0:
-                    continue  # cover-free execution: one row per depth
-                for blk in blocks:
-                    cands.append(_candidate(
-                        spec, fspec, t, opt, cover, nm, blk, local_grid,
-                        sharded_axes, problem.boundary, base_stats[blk][1],
-                        problem.dtype_bytes, hw, calib))
+        # depth 1 has no strategy (a chunk of one step IS the base
+        # operator), so the baseline row is enumerated even under a
+        # pinned-inkernel search — mirroring temporal.choose_fuse_depth
+        if "operator" in strategies or t == 1:
+            fspec = fused_specs.get(t)
+            if fspec is None:
+                fspec = temporal.fuse_steps(spec, t)
+                fused_specs[t] = fspec
+            if t == 1 and option:
+                opts = [option]
+            else:
+                opts = legal_covers(fspec)
+            for oi, opt in enumerate(opts):
+                cover = cl.make_cover(fspec, opt)
+                for nm in names:
+                    be = get_backend(nm)
+                    if not be.supports(fspec):
+                        continue
+                    if not be.uses_cover and oi > 0:
+                        continue  # cover-free execution: one row per depth
+                    for blk in blocks:
+                        cands.append(_candidate(
+                            spec, fspec, t, opt, cover, nm, blk, local_grid,
+                            sharded_axes, problem.boundary,
+                            base_stats[blk][1], problem.dtype_bytes, hw,
+                            calib))
+        if "inkernel" in strategies and t > 1:
+            # T base-radius steps per kernel instance: the cover is the
+            # BASE spec's (re-applied every step), only backends with a
+            # registered sweep_builder can execute it, and the deep slab
+            # plus the double-buffered intermediates must stay VMEM-resident
+            for oi, opt in enumerate(base_opts):
+                cover = base_covers[opt]
+                for nm in names:
+                    be = get_backend(nm)
+                    if be.sweep_builder is None or not be.supports(spec):
+                        continue
+                    if not be.uses_cover and oi > 0:
+                        continue
+                    for blk in blocks:
+                        if mx.inkernel_vmem_bytes(
+                                blk, t, r, problem.dtype_bytes,
+                                cover=cover) > _VMEM_BUDGET:
+                            continue
+                        cands.append(_candidate(
+                            spec, None, t, opt, cover, nm, blk, local_grid,
+                            sharded_axes, problem.boundary,
+                            base_stats[blk][1], problem.dtype_bytes, hw,
+                            calib, strategy="inkernel"))
     if not cands:
-        raise ValueError("no feasible (cover x backend x fuse) candidate — "
-                         "check the backend pins against the spec")
+        raise ValueError("no feasible (cover x backend x fuse x strategy) "
+                         "candidate — check the backend/strategy pins "
+                         "against the spec")
 
     best = min(cands, key=_selection_key)
     depth = best.depth if problem.steps else 1
     block = best.block
     base_option = base_stats[block][0]
-    if depth == 1:
-        # fused and unfused operator coincide: keep the decision record
-        # consistent with what compile() executes
+    if depth == 1 or best.strategy == "inkernel":
+        # depth 1: fused and unfused operator coincide; inkernel: the
+        # chunk re-applies the base cover per step — either way the record
+        # must match what compile() executes
         base_option = best.option
     schedule = tuple(temporal.fuse_schedule(problem.steps, depth))
 
@@ -698,6 +824,7 @@ def plan(problem: StencilProblem, hw=None, *,
         unroll=(1,) * spec.ndim,
         fuse_depth=depth,
         fuse_schedule=schedule,
+        fuse_strategy=best.strategy if depth > 1 else "operator",
         halo_strategy=halo_strategy,
         halo_width=depth * r,
         sharding=sharding,
@@ -710,13 +837,16 @@ def candidate_cost(problem: StencilProblem, depth: int, option: str,
                    backend: str, hw=None,
                    block: tuple[int, ...] | None = None,
                    base_option: str | None = None,
+                   strategy: str = "operator",
                    calibration=None) -> CandidateCost:
     """Model one candidate independently (the property-test entry point).
 
     ``base_option`` and ``calibration`` must match what was given to
     ``plan()`` (if anything) for the Dirichlet-0 strip surcharge and the
     calibrated terms to agree with the plan's own table — both paths share
-    :func:`_base_stats` and :func:`_candidate`.
+    :func:`_base_stats` and :func:`_candidate`.  For
+    ``strategy="inkernel"``, ``option`` names the BASE cover (applied at
+    every in-kernel step).
     """
     if hw is None:
         hw = _default_hw()
@@ -727,12 +857,15 @@ def candidate_cost(problem: StencilProblem, depth: int, option: str,
                       zip(default_block(spec), local_grid))
     block = tuple(int(b) for b in block)
     _, base_flops = _base_stats(spec, block, local_grid, base_option)
-    fspec = spec if depth == 1 else temporal.fuse_steps(spec, depth)
-    cover = cl.make_cover(fspec, option)
+    if strategy == "inkernel":
+        fspec, cover = None, cl.make_cover(spec, option)
+    else:
+        fspec = spec if depth == 1 else temporal.fuse_steps(spec, depth)
+        cover = cl.make_cover(fspec, option)
     return _candidate(spec, fspec, depth, option, cover, backend, block,
                       local_grid, _sharded_axes(problem), problem.boundary,
                       base_flops, problem.dtype_bytes, hw,
-                      _calibration_dict(calibration))
+                      _calibration_dict(calibration), strategy=strategy)
 
 
 # ---------------------------------------------------------------------------
@@ -786,6 +919,7 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
             option=eplan.base_option,
             fused_option=eplan.option if eplan.fuse_depth > 1 else "auto",
             backend=eplan.backend, boundary=boundary, block=eplan.block,
+            fuse_strategy=eplan.fuse_strategy,
             overlap=overlap, interpret=interpret)
         return CompiledStencil(plan=eplan, fn=stepper.fn,
                                global_fn=stepper.global_fn, stepper=stepper)
@@ -793,10 +927,14 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
     eng = StencilEngine(spec, option=eplan.base_option, backend=eplan.backend,
                         block=eplan.block, boundary=boundary,
                         interpret=interpret)
+    strategy = eplan.fuse_strategy
     for t in set(eplan.fuse_schedule):
         if t > 1:
-            eng.fused_engine(t, option=eplan.option
-                             if t == eplan.fuse_depth else "auto")
+            if strategy == "inkernel":
+                eng.inkernel_core(t)
+            else:
+                eng.fused_engine(t, option=eplan.option
+                                 if t == eplan.fuse_depth else "auto")
     schedule = eplan.fuse_schedule
     grid = eplan.grid
     nd = spec.ndim
@@ -807,7 +945,7 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
                              f"{tuple(x.shape[x.ndim - nd:])} != planned "
                              f"grid {grid}")
         for t in schedule:
-            x = eng._apply_chunk(x, t)
+            x = eng._apply_chunk(x, t, strategy)
         return x
 
     step = eng.step_fn() if boundary != "valid" else None

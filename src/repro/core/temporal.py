@@ -23,6 +23,7 @@ blocking scheme has to handle.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -30,8 +31,15 @@ from repro.core.matrixization import block_hbm_bytes
 from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
 __all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio",
-           "fuse_schedule", "FuseCandidate", "FuseDecision",
-           "choose_fuse_depth"]
+           "inkernel_flops_ratio", "inkernel_traffic_ratio",
+           "fuse_schedule", "FUSE_STRATEGIES", "FuseCandidate",
+           "FuseDecision", "choose_fuse_depth"]
+
+#: The two executable temporal-blocking strategies: "operator" composes T
+#: steps into one stencil of radius T*r (this module's fuse_steps);
+#: "inkernel" runs T base-radius steps inside one kernel instance with
+#: VMEM-resident intermediates (kernels/stencil_mxu.sweep_pallas_call).
+FUSE_STRATEGIES = ("operator", "inkernel")
 
 
 def _correlate_full(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -78,6 +86,25 @@ def fused_traffic_ratio(steps: int) -> float:
     return 1.0 / steps
 
 
+def inkernel_flops_ratio(spec: StencilSpec, steps: int, n: int = 128) -> float:
+    """MXU-op ratio inkernel/unfused for the parallel cover (napkin model):
+    unfused: steps x (2r+1) lines of (n+2r) products;
+    inkernel: step s runs the SAME (2r+1)-line operator over the live slab
+    of extent n + 2*(steps-1-s)*r — linear in T with only the shrinking-halo
+    overhead, vs the operator-fused (2Tr+1)^d growth (fused_flops_ratio)."""
+    r = spec.order
+    unfused = steps * (2 * r + 1) * (n + 2 * r)
+    inkernel = sum((2 * r + 1) * (n + 2 * (steps - 1 - s) * r + 2 * r)
+                   for s in range(steps))
+    return inkernel / unfused
+
+
+def inkernel_traffic_ratio(steps: int) -> float:
+    """HBM traffic ratio inkernel/unfused: identical to operator fusion —
+    intermediates live in VMEM, one deep-haloed read + one write per chunk."""
+    return fused_traffic_ratio(steps)
+
+
 def fuse_schedule(steps: int, depth: int) -> list[int]:
     """Chunk ``steps`` applications into fused sweeps of ``depth`` steps.
 
@@ -102,27 +129,34 @@ def fuse_schedule(steps: int, depth: int) -> list[int]:
 
 @dataclasses.dataclass(frozen=True)
 class FuseCandidate:
-    """Roofline model of one fuse depth at a fixed block size."""
+    """Roofline model of one (fuse depth, strategy) at a fixed block size."""
     depth: int
-    option: str               # cover option chosen for the fused spec
+    option: str               # cover option (fused spec for "operator",
+    #                           base spec for "inkernel" — applied per step)
     mxu_flops: int            # per output block, per fused sweep
     hbm_bytes: float          # per output block, per fused sweep (halo read + write)
     t_compute: float          # seconds per sweep, compute-bound
     t_traffic: float          # seconds per sweep, bandwidth-bound
     t_per_step: float         # max(t_compute, t_traffic) / depth
     traffic_reduction: float  # unfused bytes / fused bytes, per original step
+    strategy: str = "operator"  # one of FUSE_STRATEGIES
 
 
 @dataclasses.dataclass(frozen=True)
 class FuseDecision:
     depth: int
     candidates: tuple[FuseCandidate, ...]
+    strategy: str = "operator"
 
-    def candidate(self, depth: int) -> FuseCandidate:
-        for c in self.candidates:
-            if c.depth == depth:
-                return c
-        raise KeyError(depth)
+    def candidate(self, depth: int,
+                  strategy: str | None = None) -> FuseCandidate:
+        """The candidate at ``depth`` (the cheapest one when both strategies
+        were enumerated and ``strategy`` is not pinned)."""
+        found = [c for c in self.candidates if c.depth == depth
+                 and (strategy is None or c.strategy == strategy)]
+        if not found:
+            raise KeyError((depth, strategy))
+        return min(found, key=lambda c: c.t_per_step)
 
 
 # HBM bytes to update one block — shared with the planner's cost model.
@@ -134,13 +168,21 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
                       peak_flops: float | None = None,
                       hbm_bw: float | None = None,
                       dtype_bytes: int = 4,
-                      max_depth: int = 8) -> FuseDecision:
-    """Pick the fuse depth T minimizing modelled time per original step.
+                      max_depth: int = 8,
+                      strategies: Sequence[str] = ("operator",)
+                      ) -> FuseDecision:
+    """Pick the (fuse depth T, strategy) minimizing modelled time per
+    original step.
 
     The model combines :func:`repro.core.matrixization.mxu_flops` of the
-    fused spec's best cover (compute side) with the per-sweep HBM bytes
-    scaled by :func:`fused_traffic_ratio` (memory side); hardware defaults
-    come from ``repro.launch.mesh.TPU_V5E``.
+    fused spec's best cover (compute side, "operator" strategy) or
+    :func:`repro.core.matrixization.inkernel_mxu_flops` of the base cover
+    ("inkernel" — T base steps per kernel instance, flops linear in T) with
+    the per-sweep HBM bytes scaled by :func:`fused_traffic_ratio` (memory
+    side; identical for both strategies); hardware defaults come from
+    ``repro.launch.mesh.TPU_V5E``.  Only the strategies the caller's
+    backend can execute should be passed (the engine passes "inkernel" only
+    when its backend registers a ``sweep_builder``).
     """
     # deferred imports: engine imports us at module load; launch is lazy so
     # the core layer carries no hardware constants of its own
@@ -149,6 +191,10 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
 
     if steps < 1:
         raise ValueError("steps >= 1")
+    for s in strategies:
+        if s not in FUSE_STRATEGIES:
+            raise ValueError(f"unknown fuse strategy {s!r}; choose from "
+                             f"{FUSE_STRATEGIES}")
     if peak_flops is None or hbm_bw is None:
         from repro.launch.mesh import TPU_V5E
         peak_flops = TPU_V5E.peak_flops_bf16 if peak_flops is None else peak_flops
@@ -157,21 +203,47 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
     r = spec.order
 
     base_bytes = _block_bytes(block, r, dtype_bytes)  # one unfused sweep
+    # the unfused cover: the per-step operator of every inkernel candidate
+    # AND the t=1 baseline row (depth 1 has no strategy, so the baseline is
+    # enumerated even under a pinned-inkernel search)
+    base_option, base_cover = choose_cover(spec, block[0])
     cands = []
     for t in range(1, min(steps, max_depth) + 1):
-        fspec = spec if t == 1 else fuse_steps(spec, t)
-        option, cover = choose_cover(fspec, block[0])
-        flops = mx.mxu_flops(cover, block)
-        bytes_ = _block_bytes(block, fspec.order, dtype_bytes)
-        t_comp = flops / peak_flops
+        bytes_ = _block_bytes(block, t * r, dtype_bytes)
         t_traf = bytes_ / hbm_bw
         # per original step: the fused sweep advances t steps at once, so
         # its traffic is base * (bytes_/base) * fused_traffic_ratio(t) ...
         reduction = base_bytes / (bytes_ * fused_traffic_ratio(t))
-        cands.append(FuseCandidate(
-            depth=t, option=option, mxu_flops=int(flops), hbm_bytes=bytes_,
-            t_compute=t_comp, t_traffic=t_traf,
-            t_per_step=max(t_comp, t_traf) / t,
-            traffic_reduction=reduction))
-    best = min(cands, key=lambda c: c.t_per_step)
-    return FuseDecision(depth=best.depth, candidates=tuple(cands))
+        if "operator" in strategies or t == 1:
+            if t == 1:
+                option, cover = base_option, base_cover
+            else:
+                fspec = fuse_steps(spec, t)
+                option, cover = choose_cover(fspec, block[0])
+            flops = mx.mxu_flops(cover, block)
+            t_comp = flops / peak_flops
+            cands.append(FuseCandidate(
+                depth=t, option=option, mxu_flops=int(flops),
+                hbm_bytes=bytes_, t_compute=t_comp, t_traffic=t_traf,
+                t_per_step=max(t_comp, t_traf) / t,
+                traffic_reduction=reduction, strategy="operator"))
+        if "inkernel" in strategies and t > 1 and \
+                mx.inkernel_vmem_bytes(block, t, r, dtype_bytes,
+                                       cover=base_cover) <= mx.VMEM_BUDGET:
+            # the deep slab + double-buffered intermediates must stay
+            # VMEM-resident — same feasibility gate the planner applies,
+            # so an auto-chosen depth is never one the kernel cannot hold
+            flops = mx.inkernel_mxu_flops(base_cover, block, t)
+            t_comp = flops / peak_flops
+            cands.append(FuseCandidate(
+                depth=t, option=base_option, mxu_flops=int(flops),
+                hbm_bytes=bytes_, t_compute=t_comp, t_traffic=t_traf,
+                t_per_step=max(t_comp, t_traf) / t,
+                traffic_reduction=reduction, strategy="inkernel"))
+    if not cands:
+        raise ValueError(f"no fuse candidate for strategies {strategies!r} "
+                         f"at steps={steps}")
+    best = min(cands, key=lambda c: (c.t_per_step, c.t_compute, c.depth,
+                                     c.strategy))
+    return FuseDecision(depth=best.depth, candidates=tuple(cands),
+                        strategy=best.strategy)

@@ -21,7 +21,8 @@ from repro.kernels import ref as kref
 from repro.kernels import stencil_mxu
 from repro.kernels import banded_mixer as bm
 
-__all__ = ["stencil_matrixized", "banded_mix", "pallas_backend_core"]
+__all__ = ["stencil_matrixized", "stencil_sweep_matrixized", "banded_mix",
+           "pallas_backend_core", "pallas_sweep_core"]
 
 
 def pallas_backend_core(plan, *, interpret: bool = True):
@@ -36,18 +37,45 @@ def pallas_backend_core(plan, *, interpret: bool = True):
                              interpret=interpret)
 
 
-def _pad_to_multiple(x, block, r):
-    """Zero-pad the haloed input so the valid output tiles evenly."""
+def pallas_sweep_core(plan, steps: int, *, interpret: bool = True):
+    """Valid-mode T-step core (the registry's ``sweep_builder`` contract).
+
+    Advances ``steps`` applications of ``plan.spec`` per call via the
+    in-kernel temporal-blocking kernel — shrinks each spatial axis by
+    ``2 * steps * spec.order``, exactly like the ``steps``-fused operator's
+    core, so the halo layer and the distributed deep-halo protocol drive it
+    unchanged.
+    """
+    return functools.partial(stencil_sweep_matrixized, spec=plan.spec,
+                             steps=steps, cover=plan.cover, block=plan.block,
+                             interpret=interpret)
+
+
+def _pad_to_multiple(x, block, w):
+    """Zero-pad the ``w``-haloed input so the valid output tiles evenly."""
     pads = []
     out_pad = []
     for s, b in zip(x.shape, block):
-        out = s - 2 * r
+        out = s - 2 * w
         extra = (-out) % b
         pads.append((0, extra))
         out_pad.append(extra)
     if any(p[1] for p in pads):
         x = jnp.pad(x, pads)
     return x, out_pad
+
+
+def _default_block(spec: StencilSpec, out_sizes, halo_width: int):
+    """The planner's best-ranked MXU-aligned tile for this spatial shape.
+
+    Routing the default through :func:`repro.core.planner.best_block`
+    (instead of a hardcoded ``(128, 128)`` / ``(8, 8, 128)`` clamped with a
+    raw ``min``) keeps ad-hoc kernel calls on lane/sublane-aligned tiles
+    whenever the grid allows one.  Deferred import: the planner imports the
+    engine, which builds its cores through this module.
+    """
+    from repro.core.planner import best_block
+    return best_block(spec, tuple(out_sizes), halo_width=halo_width)
 
 
 def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
@@ -63,12 +91,13 @@ def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
     and preserve shape.
     """
     x = halo.pad_halo(x, spec.order, spec.ndim, boundary)
+    out_sizes = tuple(x.shape[x.ndim - spec.ndim + a] - 2 * spec.order
+                      for a in range(spec.ndim))
     if cover is None:
         cover = cl.make_cover(spec, option)
     if block is None:
-        block = (128, 128) if spec.ndim == 2 else (8, 8, 128)
-    block = tuple(min(b, x.shape[x.ndim - spec.ndim + a] - 2 * spec.order)
-                  for a, b in enumerate(block))
+        block = _default_block(spec, out_sizes, spec.order)
+    block = tuple(min(b, s) for b, s in zip(block, out_sizes))
     plan = stencil_mxu.build_kernel_plan(spec, cover, block)
 
     def single(xs):
@@ -76,6 +105,51 @@ def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
         out = stencil_mxu.stencil_pallas_call(xs_p, plan, interpret=interpret)
         index = tuple(slice(0, s) for s in
                       (d - 2 * spec.order for d in xs.shape))
+        return out[index]
+
+    lead = x.ndim - spec.ndim
+    fn = single
+    for _ in range(lead):
+        fn = jax.vmap(fn)
+    return fn(x)
+
+
+def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
+                             steps: int,
+                             cover: cl.LineCover | None = None,
+                             block: tuple[int, ...] | None = None,
+                             option: str = "parallel",
+                             boundary: str = "valid",
+                             interpret: bool = True) -> jnp.ndarray:
+    """``steps`` stencil applications in ONE in-kernel temporally-blocked
+    pass (paper §6 x §4.3).  Batch axes lead.
+
+    Boundary semantics mirror a ``steps``-fused operator: 'valid' shrinks
+    the spatial extent by ``steps * spec.order`` per side; 'zero'/'periodic'
+    pad the deep halo once and preserve shape ('zero' is the zero-EXTENDED
+    evolution — the engine splices per-step-exact strips on top, exactly as
+    it does for operator fusion).
+    """
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    w = steps * spec.order
+    x = halo.pad_halo(x, w, spec.ndim, boundary)
+    out_sizes = tuple(x.shape[x.ndim - spec.ndim + a] - 2 * w
+                      for a in range(spec.ndim))
+    if any(s <= 0 for s in out_sizes):
+        raise ValueError(f"input {x.shape} too small for {steps} in-kernel "
+                         f"steps of order {spec.order}")
+    if cover is None:
+        cover = cl.make_cover(spec, option)
+    if block is None:
+        block = _default_block(spec, out_sizes, w)
+    block = tuple(min(b, s) for b, s in zip(block, out_sizes))
+    plan = stencil_mxu.build_sweep_kernel_plan(spec, cover, block, steps)
+
+    def single(xs):
+        xs_p, _ = _pad_to_multiple(xs, block, w)
+        out = stencil_mxu.sweep_pallas_call(xs_p, plan, interpret=interpret)
+        index = tuple(slice(0, d - 2 * w) for d in xs.shape)
         return out[index]
 
     lead = x.ndim - spec.ndim

@@ -4,15 +4,31 @@ One kernel instance owns one output tile (the SME accumulator-register
 analogue, held in VMEM for the whole update — paper observation 1/3).  The
 haloed input slab is an overlapping ``pl.Element`` window of the HBM buffer;
 shifted sub-slabs replace SME's inter-register vector assembling (§4.3).
-Every multi-tap coefficient line is executed as ONE banded-Toeplitz
+Every multi-tap coefficient line is executed as a banded-Toeplitz
 contraction on the MXU (the accumulated sum of the line's ``2r+n`` outer
 products, Eq. 12); single-tap lines degrade to VPU scaled-shift adds exactly
 as the paper's §3.3 star analysis prescribes.
+
+Line batching (paper §4.3 input-vector sharing): all same-axis Toeplitz
+bands are stacked into ONE ``(L*n, n+2r)`` operator and issued as a single
+``dot_general`` per axis against the shared haloed slab — the L lines reuse
+the same input vectors from one MXU pass, and the per-line results are
+peeled off by static row slices afterwards.
 
 Multi-dimensional unrolling (§4.2) = the block shape: a (bi, bj, bk) block
 is the paper's ``ui x uk`` unroll with the implicit j-dimension reuse, and
 the Python-unrolled line loop below reproduces the §4.3 schedule (one slab
 residency, all accumulator updates).
+
+In-kernel temporal blocking (paper §6 x §4.3): ``sweep_pallas_call`` runs T
+steps of the BASE operator inside one kernel instance.  The instance owns a
+``T*r``-deep haloed slab; each step contracts the per-step Toeplitz set
+against the live slab and writes the result to a double-buffered VMEM
+scratch pair, shrinking the live halo by ``r`` per side per step, and only
+the final state is written to HBM.  Intermediates never touch HBM, so MXU
+work stays ``T x (2r+1)``-dense instead of the operator-fused
+``(2Tr+1)``-dense while the per-chunk traffic is the same single
+read+write.
 """
 from __future__ import annotations
 
@@ -25,13 +41,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import matrixization as mx
 from repro.core.coefficient_lines import LineCover
 from repro.core.stencil_spec import StencilSpec
 from repro.kernels.pallas_compat import element_block_spec
 
-__all__ = ["KernelPlan", "build_kernel_plan", "stencil_pallas_call"]
+__all__ = ["KernelPlan", "build_kernel_plan", "stencil_pallas_call",
+           "SweepKernelPlan", "build_sweep_kernel_plan", "sweep_pallas_call"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,13 +71,38 @@ class KernelPlan:
     def vpu_taps(self) -> int:
         return len(self.point_taps)
 
+    def axis_groups(self) -> tuple[tuple[int, np.ndarray, tuple[dict, ...]], ...]:
+        """Same-axis lines batched: (axis, stacked Toeplitz, per-line fixed).
 
-def build_kernel_plan(spec: StencilSpec, cover: LineCover,
-                      block: tuple[int, ...]) -> KernelPlan:
-    if len(block) != spec.ndim:
-        raise ValueError(f"block rank {len(block)} != stencil ndim {spec.ndim}")
-    r, e = spec.order, spec.extent
-    mat_lines = []
+        The stacked operator is the row-concatenation of the axis's line
+        Toeplitzes — one ``(L*n, n+2r)`` matrix contracted ONCE per axis
+        (§4.3 input-vector sharing); line ``l``'s rows are the static slice
+        ``[l*n, (l+1)*n)`` of the product.
+        """
+        return _axis_groups(self.mat_lines)
+
+
+def _axis_groups(mat_lines) -> tuple[tuple[int, np.ndarray, tuple[dict, ...]], ...]:
+    groups: dict[int, list] = {}
+    for axis, t, fixed in mat_lines:
+        groups.setdefault(axis, []).append((t, dict(fixed)))
+    out = []
+    for axis in sorted(groups):
+        ts, fixeds = zip(*groups[axis])
+        out.append((axis, np.concatenate(ts, axis=0), tuple(fixeds)))
+    return tuple(out)
+
+
+def _plan_lines(spec: StencilSpec, cover: LineCover):
+    """(band_lines, point_taps) kernel constants shared by both kernels.
+
+    ``band_lines`` carry the RAW gather band per multi-tap line —
+    ``(axis, (len-2r+1,) band, fixed gather offsets)`` — so callers build
+    Toeplitz operators at whatever output extent they need (the
+    single-step kernel once at the block, the sweep kernel once per step).
+    """
+    e = spec.extent
+    band_lines = []
     point_taps = []
     for line in cover.lines:
         if line.is_diagonal or line.nnz <= 1:
@@ -80,46 +123,83 @@ def build_kernel_plan(spec: StencilSpec, cover: LineCover,
                 point_taps.append((float(c), gather))
             continue
         band, fixed = mx.line_to_gather_band(line, spec)
-        t = mx.toeplitz_band_np(band, block[line.axis]).astype(np.float32)
-        # numpy path: this runs inside jit traces (plan-per-shape); a
-        # jnp intermediate here would be a tracer (see toeplitz_band_np)
-        mat_lines.append((line.axis, t, tuple(sorted(fixed.items()))))
+        band_lines.append((line.axis, np.asarray(band, np.float64),
+                           tuple(sorted(fixed.items()))))
+    return tuple(band_lines), tuple(point_taps)
+
+
+def build_kernel_plan(spec: StencilSpec, cover: LineCover,
+                      block: tuple[int, ...]) -> KernelPlan:
+    if len(block) != spec.ndim:
+        raise ValueError(f"block rank {len(block)} != stencil ndim {spec.ndim}")
+    band_lines, point_taps = _plan_lines(spec, cover)
+    # numpy path: this runs inside jit traces (plan-per-shape); a
+    # jnp intermediate here would be a tracer (see toeplitz_band_np)
+    mat_lines = tuple(
+        (axis, mx.toeplitz_band_np(band, block[axis]).astype(np.float32),
+         fixed)
+        for axis, band, fixed in band_lines)
     return KernelPlan(spec=spec, block=tuple(block),
-                      mat_lines=tuple(mat_lines), point_taps=tuple(point_taps))
+                      mat_lines=mat_lines, point_taps=point_taps)
+
+
+def _apply_step(slab, *, spec: StencilSpec, out_ext: tuple[int, ...],
+                axis_ts: Sequence[jnp.ndarray],
+                axis_meta: Sequence[tuple[int, tuple[dict, ...]]],
+                point_taps) -> jnp.ndarray:
+    """One matrixized stencil application of a (VMEM-resident) slab value.
+
+    ``slab`` has extent ``out_ext[a] + 2r`` on every axis; the result has
+    extent ``out_ext``.  ``axis_ts[i]`` is the stacked Toeplitz for
+    ``axis_meta[i] = (axis, per-line fixed offsets)`` — ONE ``dot_general``
+    per axis (§4.3); per-line terms are separated by static row slices and
+    trimmed to the output window on the non-contracted axes.
+    """
+    nd, r = spec.ndim, spec.order
+    acc = jnp.zeros(out_ext, dtype=jnp.float32)
+    slab = slab.astype(jnp.float32)
+    for t, (axis, fixeds) in zip(axis_ts, axis_meta):
+        n_a = out_ext[axis]
+        # ONE MXU contraction covers every line on this axis (Eq. 12 sums,
+        # batched): (L*n_a, n_a+2r) x slab -> (L*n_a, other slab extents).
+        term = jax.lax.dot_general(
+            t, slab,
+            dimension_numbers=(((1,), (axis,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        others = [a for a in range(nd) if a != axis]
+        for l, fixed_d in enumerate(fixeds):
+            index = [slice(l * n_a, (l + 1) * n_a)]
+            for a in others:
+                off = fixed_d.get(a, 0)
+                index.append(slice(off, off + out_ext[a]))
+            acc = acc + jnp.moveaxis(term[tuple(index)], 0, axis)
+    for c, gather in point_taps:
+        index = tuple(slice(g, g + n) for g, n in zip(gather, out_ext))
+        acc = acc + jnp.float32(c) * slab[index].astype(jnp.float32)
+    return acc
 
 
 def _make_kernel(plan: KernelPlan, out_dtype):
-    nd = plan.spec.ndim
-    r = plan.spec.order
-    block = plan.block
+    groups = plan.axis_groups()
+    axis_meta = [(axis, fixeds) for axis, _, fixeds in groups]
 
     def kernel(x_ref, *refs):
         t_refs, o_ref = refs[:-1], refs[-1]
         slab = x_ref[...]
-        acc = jnp.zeros(block, dtype=jnp.float32)
-        for slot, (axis, _, fixed) in enumerate(plan.mat_lines):
-            fixed_d = dict(fixed)
-            index = []
-            for a in range(nd):
-                if a == axis:
-                    index.append(slice(None))            # keep the halo
-                else:
-                    off = fixed_d.get(a, 0)
-                    index.append(slice(off, off + block[a]))
-            sub = slab[tuple(index)].astype(jnp.float32)
-            t = t_refs[slot][...]
-            # ONE MXU contraction == the line's 2r+n outer products (Eq. 12).
-            term = jax.lax.dot_general(
-                t, sub,
-                dimension_numbers=(((1,), (axis,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            acc = acc + jnp.moveaxis(term, 0, axis)
-        for c, gather in plan.point_taps:
-            index = tuple(slice(g, g + b) for g, b in zip(gather, block))
-            acc = acc + jnp.float32(c) * slab[index].astype(jnp.float32)
+        acc = _apply_step(slab, spec=plan.spec, out_ext=plan.block,
+                          axis_ts=[t[...] for t in t_refs],
+                          axis_meta=axis_meta, point_taps=plan.point_taps)
         o_ref[...] = acc.astype(out_dtype)
 
     return kernel
+
+
+def _broadcast_spec(t: np.ndarray) -> pl.BlockSpec:
+    """Whole-array BlockSpec for a kernel constant (same for every grid
+    instance).  The zero origin is bound through a default arg — a plain
+    ``lambda *ids: (0,) * t.ndim`` would capture the loop variable ``t`` by
+    reference and silently use the LAST iteration's rank."""
+    return pl.BlockSpec(t.shape, lambda *ids, nd=t.ndim: (0,) * nd)
 
 
 def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
@@ -145,9 +225,9 @@ def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
         lambda *ids: tuple(i * b for i, b in zip(ids, block)),
     )]
     t_inputs = []
-    for axis, t, _ in plan.mat_lines:
+    for _axis, t, _fixeds in plan.axis_groups():
         t_inputs.append(jnp.asarray(t, jnp.float32))
-        in_specs.append(pl.BlockSpec(t.shape, lambda *ids: (0,) * t.ndim))
+        in_specs.append(_broadcast_spec(t))
 
     out_spec = pl.BlockSpec(block, lambda *ids: ids)
     kernel = _make_kernel(plan, x.dtype)
@@ -157,5 +237,145 @@ def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
         in_specs=in_specs,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=interpret,
+    )(x, *t_inputs)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel temporal blocking: T base steps per grid instance, VMEM-resident
+# intermediates (the planner's fuse_strategy="inkernel" kernel).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepKernelPlan:
+    """Host-side compilation of (spec, cover, block, steps).
+
+    ``step_exts[s]`` is the live output extent after step ``s``: the slab
+    starts ``steps*r`` deep and every step consumes ``r`` of halo per side,
+    so ``step_exts[s][a] = block[a] + 2*(steps-1-s)*r`` and
+    ``step_exts[-1] == block``.  ``band_lines``/``point_taps`` describe the
+    BASE operator at band level — the same cover applies at every step,
+    and each step's Toeplitz set is built from the bands at that step's
+    extent (``step_groups``).
+    """
+
+    spec: StencilSpec
+    block: tuple[int, ...]
+    steps: int
+    # (axis, raw (2r+1,) gather band, fixed gather offsets) per multi-tap line
+    band_lines: tuple[tuple[int, np.ndarray, tuple[tuple[int, int], ...]], ...]
+    point_taps: tuple[tuple[float, tuple[int, ...]], ...]
+
+    @property
+    def step_exts(self) -> tuple[tuple[int, ...], ...]:
+        r = self.spec.order
+        return tuple(
+            tuple(b + 2 * (self.steps - 1 - s) * r for b in self.block)
+            for s in range(self.steps))
+
+    def step_groups(self, s: int):
+        """Per-axis stacked Toeplitz group at step ``s``'s output extent."""
+        ext = self.step_exts[s]
+        sized = tuple(
+            (axis, mx.toeplitz_band_np(band, ext[axis]).astype(np.float32),
+             fixed)
+            for axis, band, fixed in self.band_lines)
+        return _axis_groups(sized)
+
+
+def build_sweep_kernel_plan(spec: StencilSpec, cover: LineCover,
+                            block: tuple[int, ...],
+                            steps: int) -> SweepKernelPlan:
+    if len(block) != spec.ndim:
+        raise ValueError(f"block rank {len(block)} != stencil ndim {spec.ndim}")
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    band_lines, point_taps = _plan_lines(spec, cover)
+    return SweepKernelPlan(spec=spec, block=tuple(block), steps=int(steps),
+                           band_lines=band_lines, point_taps=point_taps)
+
+
+def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
+                       step_groups: Sequence[Sequence[tuple]]):
+    """``step_groups[s]`` is ``plan.step_groups(s)`` — built ONCE by
+    :func:`sweep_pallas_call` (which also feeds the same tensors in as
+    kernel inputs, ordered step-major, axis-minor)."""
+    spec = plan.spec
+    steps = plan.steps
+    exts = plan.step_exts
+    groups_meta = [[(axis, fixeds) for axis, _t, fixeds in groups]
+                   for groups in step_groups]
+
+    def kernel(x_ref, *refs):
+        n_t = sum(len(g) for g in step_groups)
+        t_refs, o_ref = refs[:n_t], refs[n_t]
+        bufs = refs[n_t + 1:]          # double-buffered VMEM scratch pair
+        slab = x_ref[...]              # (block + 2*steps*r per axis)
+        pos = 0
+        for s in range(steps):
+            n_groups = len(step_groups[s])
+            acc = _apply_step(
+                slab, spec=spec, out_ext=exts[s],
+                axis_ts=[t_refs[pos + g][...] for g in range(n_groups)],
+                axis_meta=groups_meta[s], point_taps=plan.point_taps)
+            pos += n_groups
+            if s == steps - 1:
+                o_ref[...] = acc.astype(out_dtype)
+            else:
+                # park the shrunk live slab in the ping-pong scratch buffer
+                # (never HBM) and read it back as the next step's input
+                buf = bufs[s % 2]
+                index = tuple(slice(0, n) for n in exts[s])
+                buf[index] = acc
+                slab = buf[index]
+
+    return kernel
+
+
+def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Advance a haloed spatial array by ``plan.steps`` base steps in-kernel.
+
+    ``x``: (S_0 + 2*T*r, ..., S_{d-1} + 2*T*r) haloed input; returns
+    (S_0, ..., S_{d-1}) — the state after T valid-mode applications.  One
+    grid instance owns one output tile plus its ``T*r``-deep slab and runs
+    every step in VMEM; only the final state is written back.
+    """
+    nd, r = plan.spec.ndim, plan.spec.order
+    block, steps = plan.block, plan.steps
+    w = steps * r
+    if x.ndim != nd:
+        raise ValueError(f"kernel expects rank-{nd} spatial input, got {x.shape}")
+    out_shape = tuple(s - 2 * w for s in x.shape)
+    for s, b in zip(out_shape, block):
+        if s % b:
+            raise ValueError(f"spatial size {s} not a multiple of block {b}")
+    grid = tuple(s // b for s, b in zip(out_shape, block))
+
+    in_specs = [element_block_spec(
+        tuple(b + 2 * w for b in block),
+        lambda *ids: tuple(i * b for i, b in zip(ids, block)),
+    )]
+    t_inputs = []
+    step_groups = [plan.step_groups(s) for s in range(steps)]
+    for groups in step_groups:
+        for _axis, t, _fixeds in groups:
+            t_inputs.append(jnp.asarray(t, jnp.float32))
+            in_specs.append(_broadcast_spec(t))
+
+    # double-buffered slab scratch at the deepest intermediate extent
+    buf_ext = tuple(b + 2 * (steps - 1) * r for b in block)
+    scratch = [pltpu.VMEM(buf_ext, jnp.float32),
+               pltpu.VMEM(buf_ext, jnp.float32)]
+
+    out_spec = pl.BlockSpec(block, lambda *ids: ids)
+    kernel = _make_sweep_kernel(plan, x.dtype, step_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
     )(x, *t_inputs)

@@ -36,14 +36,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import StencilEngine
-from repro.core.planner import (StencilProblem, candidate_cost, plan)
+from repro.core.planner import (StencilProblem, candidate_cost, plan,
+                                factor_key as _factor_key)
 from repro.core.stencil_spec import PAPER_SUITE
 from repro.launch.hlo_analysis import analyze_hlo
 
 __all__ = ["CandidateMeasurement", "CalibrationRecord", "measure_candidate",
-           "calibrate", "calibrate_suite", "CALIBRATION_VERSION"]
+           "calibrate", "calibrate_suite", "factor_key",
+           "CALIBRATION_VERSION"]
 
-CALIBRATION_VERSION = 1
+CALIBRATION_VERSION = 2
+
+# THE key format lives beside its reader (planner._calib_factor); this
+# module only re-exports it for record construction.
+factor_key = _factor_key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +63,8 @@ class CandidateMeasurement:
     median wall-clock of the compiled chunk on THIS host (None unless
     timing was requested — on a CPU container it measures XLA-CPU, so only
     its ranking, never its magnitude, is comparable to the TPU model).
+    ``strategy`` records which temporal execution was compiled ("operator"
+    fused-operator chunk | "inkernel" VMEM-resident multi-step kernel).
     """
     depth: int
     option: str
@@ -67,20 +75,23 @@ class CandidateMeasurement:
     measured_flops: float
     measured_bytes: float
     wall_s: float | None = None
+    strategy: str = "operator"
 
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationRecord:
-    """Frozen per-backend efficiency factors, with their evidence.
+    """Frozen per-(backend, strategy) efficiency factors, with evidence.
 
-    ``compute[backend]`` is the measured/modelled MXU-flop ratio (median
-    over that backend's measurements): the planner divides the backend's
-    modelled ``mxu_efficiency`` by it.  ``traffic[backend]`` is the
+    Factor tables are keyed by :func:`factor_key` — the bare backend name
+    for operator-strategy measurements, ``"backend:inkernel"`` for
+    in-kernel ones.  ``compute[key]`` is the measured/modelled MXU-flop
+    ratio (median over that key's measurements): the planner divides the
+    backend's modelled ``mxu_efficiency`` by it.  ``traffic[key]`` is the
     measured/modelled HBM-byte ratio: the planner multiplies ``t_traffic``
     by it.  Factors are strictly positive, so calibration is a monotone
-    per-backend rescaling — it can re-rank backends against each other but
+    per-key rescaling — it can re-rank backends against each other but
     never ranks a candidate above one that strictly dominates it on every
-    raw term within the same backend (regression-tested in
+    raw term within the same (backend, strategy) (regression-tested in
     ``tests/test_calibrate.py``).
 
     JSON-round-trippable by construction:
@@ -98,17 +109,20 @@ class CalibrationRecord:
     def from_measurements(cls, hw: str, problem: dict,
                           measurements: Sequence[CandidateMeasurement]
                           ) -> "CalibrationRecord":
-        """Pool measurements into per-backend median factors."""
+        """Pool measurements into per-(backend, strategy) median factors."""
         compute: dict[str, float] = {}
         traffic: dict[str, float] = {}
-        for backend in sorted({m.backend for m in measurements}):
-            ms = [m for m in measurements if m.backend == backend]
+        keys = sorted({factor_key(m.backend, m.strategy)
+                       for m in measurements})
+        for key in keys:
+            ms = [m for m in measurements
+                  if factor_key(m.backend, m.strategy) == key]
             fl = [m.measured_flops / m.modelled_flops for m in ms
                   if m.modelled_flops > 0 and m.measured_flops > 0]
             by = [m.measured_bytes / m.modelled_bytes for m in ms
                   if m.modelled_bytes > 0 and m.measured_bytes > 0]
-            compute[backend] = float(np.median(fl)) if fl else 1.0
-            traffic[backend] = float(np.median(by)) if by else 1.0
+            compute[key] = float(np.median(fl)) if fl else 1.0
+            traffic[key] = float(np.median(by)) if by else 1.0
         return cls(version=CALIBRATION_VERSION, hw=hw, problem=dict(problem),
                    compute=compute, traffic=traffic,
                    measurements=tuple(measurements))
@@ -142,30 +156,39 @@ def measure_candidate(problem: StencilProblem, depth: int, option: str,
                       backend: str, block: tuple[int, ...], *,
                       interpret: bool = True, wall: bool = False,
                       repeats: int = 3,
-                      base_option: str | None = None) -> CandidateMeasurement:
+                      base_option: str | None = None,
+                      strategy: str = "operator") -> CandidateMeasurement:
     """Compile one candidate's fused chunk and read its measured costs.
 
     The executable is exactly what ``compile_plan`` would run per chunk:
-    the engine's ``_apply_chunk`` at ``depth`` (fused operator re-covered
-    with ``option``, boundary handling included), jitted over the
-    device-local grid.  Measured FLOPs/bytes come from the loop-aware HLO
-    analysis of the compiled module — the same analysis ``launch.dryrun``
-    applies to the production cells.
+    the engine's ``_apply_chunk`` at ``depth`` with ``strategy`` (fused
+    operator re-covered with ``option``, or the in-kernel multi-step core
+    over the base cover ``option``; boundary handling included), jitted
+    over the device-local grid.  Measured FLOPs/bytes come from the
+    loop-aware HLO analysis of the compiled module — the same analysis
+    ``launch.dryrun`` applies to the production cells.
     """
     spec = problem.spec
     local_grid = problem.local_grid()
     # the base engine's cover must match compile_plan's (it prices the
-    # zero-boundary strip fixups at depth>1): the pinned base_option if the
-    # plan had one, else the same choose_cover default compile_plan uses
-    eng = StencilEngine(spec,
-                        option=option if depth == 1 else (base_option
-                                                          or "auto"),
+    # zero-boundary strip fixups at depth>1, and for the in-kernel strategy
+    # it IS the per-step cover): the pinned base_option if the plan had
+    # one, the candidate's own cover for in-kernel/depth-1 rows, else the
+    # same choose_cover default compile_plan uses
+    if depth == 1 or strategy == "inkernel":
+        base_opt = option
+    else:
+        base_opt = base_option or "auto"
+    eng = StencilEngine(spec, option=base_opt,
                         backend=backend, block=tuple(block),
                         boundary=problem.boundary, interpret=interpret)
     if depth > 1:
-        eng.fused_engine(depth, option=option)
+        if strategy == "inkernel":
+            eng.inkernel_core(depth)
+        else:
+            eng.fused_engine(depth, option=option)
 
-    fn = jax.jit(lambda x: eng._apply_chunk(x, depth))
+    fn = jax.jit(lambda x: eng._apply_chunk(x, depth, strategy))
     x = jnp.zeros(local_grid, jnp.dtype(problem.dtype))
     compiled = fn.lower(x).compile()
     hlo = analyze_hlo(compiled.as_text())
@@ -181,14 +204,14 @@ def measure_candidate(problem: StencilProblem, depth: int, option: str,
         wall_s = float(np.median(ts))
 
     modelled = candidate_cost(problem, depth, option, backend, block=block,
-                              base_option=base_option)
+                              base_option=base_option, strategy=strategy)
     return CandidateMeasurement(
         depth=depth, option=option, backend=backend, block=tuple(block),
         modelled_flops=float(modelled.mxu_flops),
         modelled_bytes=float(modelled.hbm_bytes),
         measured_flops=float(hlo.dot_flops),
         measured_bytes=float(hlo.traffic_bytes),
-        wall_s=wall_s)
+        wall_s=wall_s, strategy=strategy)
 
 
 def calibrate(problem: StencilProblem, hw=None, *, top_k: int = 3,
@@ -207,7 +230,8 @@ def calibrate(problem: StencilProblem, hw=None, *, top_k: int = 3,
     measurements = [
         measure_candidate(problem, c.depth, c.option, c.backend, c.block,
                           interpret=interpret, wall=wall,
-                          base_option=plan_kwargs.get("option"))
+                          base_option=plan_kwargs.get("option"),
+                          strategy=c.strategy)
         for c in ranked]
     return CalibrationRecord.from_measurements(
         p.hw["name"], problem.to_dict(), measurements)
@@ -240,7 +264,7 @@ def calibrate_suite(names: Sequence[str] = ("box2d_r1", "star2d_r2"),
         for c in p.ranked()[:max(1, top_k)]:
             measurements.append(
                 measure_candidate(problem, c.depth, c.option, c.backend,
-                                  c.block, wall=wall))
+                                  c.block, wall=wall, strategy=c.strategy))
     meta = {"suite": list(names), "grid": list(grid), "steps": int(steps),
             "backends": list(backends)}
     return CalibrationRecord.from_measurements(hw_name or "", meta,

@@ -16,7 +16,11 @@ enumerated candidate, best first — see ``ExecutionPlan.explain``):
 
     rank       selection order under the deterministic total order
     depth      fused-chunk length T (temporal fusion, paper §6)
-    cover      coefficient-line cover of the T-fused operator
+    strat      temporal strategy: "operator" (one radius-T*r fused
+               operator) | "inkernel" (T VMEM-resident base steps per
+               Pallas kernel instance, flops linear in T)
+    cover      coefficient-line cover of the T-fused operator (of the
+               BASE operator for inkernel rows — applied every step)
     backend    backend registry entry executing the update
     block      output tile the row was scored at (the autotuner's
                block search; NxM with the minormost extent lane-aligned)

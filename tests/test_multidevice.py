@@ -255,6 +255,52 @@ def test_fused_distributed_sweep_2d_mesh_and_3d():
     """)
 
 
+def test_fused_distributed_inkernel_one_exchange_per_chunk():
+    """In-kernel temporal blocking under the fused distributed stepper:
+    the strategy swaps only the chunk core, so a T-deep chunk still costs
+    exactly ONE T*r-deep halo exchange (same ppermute count as operator
+    fusion), and the result stays bit-exact against the single-device
+    in-kernel sweep and exact-to-tolerance against the sequential
+    reference (periodic + zero)."""
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import api
+        from repro.core.engine import StencilEngine
+        from repro.launch.mesh import make_mesh
+        from repro.kernels.ref import stencil_ref
+
+        mesh = make_mesh((2,), ("gx",))
+        spec = api.star(2, 2, seed=1)
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(32, 24)),
+                        jnp.float32)
+        for boundary in ("periodic", "zero"):
+            prob = api.StencilProblem(spec, (32, 24), boundary=boundary,
+                                      steps=7, mesh=mesh,
+                                      grid_axes=("gx", ""))
+            p = api.plan(prob, fuse=3, fuse_strategy="inkernel")
+            assert p.fuse_strategy == "inkernel" and p.backend == "pallas"
+            assert p.fuse_schedule == (3, 3, 1), p.fuse_schedule
+            assert p.halo_strategy == "exchange" and p.halo_width == 6
+            run = api.compile(p, mesh=mesh)
+            ref = x
+            for _ in range(7):
+                ref = stencil_ref(ref, spec, boundary=boundary)
+            err = float(jnp.abs(run(x) - ref).max())
+            assert err < 1e-4, (boundary, err)
+            # single-device in-kernel sweep parity
+            eng = StencilEngine(spec, backend="pallas", block=p.block,
+                                boundary=boundary)
+            sweep = eng.sweep(x, 7, fuse=3, strategy="inkernel")
+            err_sweep = float(jnp.abs(run(x) - sweep).max())
+            assert err_sweep < 1e-5, (boundary, err_sweep)
+            # ONE deep exchange per fused chunk, same as operator fusion:
+            # 3 chunks x 1 sharded axis x 2 directions = 6 ppermutes
+            n_pp = str(jax.make_jaxpr(run.global_fn)(x)).count("ppermute")
+            assert n_pp == 6, (boundary, n_pp)
+        print("FUSED DISTRIBUTED INKERNEL OK")
+    """)
+
+
 def test_distributed_stepper_unsharded_axis_regression():
     """One sharded + one unsharded spatial axis: the overlap splice used to
     shape-error (the interior shrank the unsharded axis but the splice index

@@ -97,7 +97,7 @@ def test_plan_round_trip_and_min_cost_property(draw):
         again = candidate_cost(_problem(spec, grid=(n, n), boundary=boundary,
                                         steps=p.steps),
                                c.depth, c.option, c.backend, block=c.block,
-                               base_option=pin)
+                               base_option=pin, strategy=c.strategy)
         assert again == c
 
 
