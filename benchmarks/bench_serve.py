@@ -1,0 +1,137 @@
+"""Batched serving benchmark: modelled per-state cost vs batch size, plus
+measured serving-loop throughput.
+
+For every PAPER_SUITE cell the planner is run at the plan-report grids
+for B in BATCHES and the chosen candidate's per-STATE per-step cost is
+recorded (``CandidateCost.t_per_step`` is already per state, so the
+B-curve directly shows what batch-in-M buys: MXU M-fill on compute-bound
+cells, launch amortization everywhere).  The acceptance headline is the
+count of cells where B=8 is strictly cheaper per state than B=1.
+
+A measured section then drives the real serving loop
+(``launch.serve_stencil.StencilServer``) on a small cell subset at
+max_batch 1 vs 8 and reports warm per-state wall clock — on this CPU
+container the numbers are XLA-CPU magnitudes, but the 1-vs-8 ratio is the
+same launch/dispatch amortization the model prices.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --json [--out BENCH_serve.json]
+
+``make bench-smoke`` runs it so every PR leaves a diffable trajectory
+point in ``BENCH_serve.json``.
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro import api
+
+MODEL_GRID_2D = (256, 256)
+MODEL_GRID_3D = (64, 64, 64)
+MODEL_STEPS = 16
+BATCHES = (1, 2, 4, 8)
+BENCH_VERSION = 1
+
+MEASURE_CELLS = ("box2d_r1", "star2d_r2")
+MEASURE_GRID = (48, 48)
+MEASURE_STEPS = 4
+MEASURE_REQUESTS = 16
+
+
+def model_cells(steps=MODEL_STEPS):
+    """Modelled per-state cost per PAPER_SUITE cell across BATCHES."""
+    rows = []
+    suite = api.PAPER_SUITE()
+    for name in sorted(suite):
+        spec = suite[name]
+        grid = MODEL_GRID_2D if spec.ndim == 2 else MODEL_GRID_3D
+        per_state = {}
+        chosen = {}
+        for b in BATCHES:
+            p = api.plan(api.StencilProblem(spec, grid, boundary="periodic",
+                                            steps=steps, batch=b))
+            ch = p.chosen()
+            per_state[b] = ch.t_per_step
+            chosen[b] = {"strategy": p.fuse_strategy, "depth": p.fuse_depth,
+                         "backend": p.backend, "block": list(p.block)}
+        rows.append({
+            "cell": name, "spec": spec.describe(), "grid": list(grid),
+            "per_state_s": {str(b): per_state[b] for b in BATCHES},
+            "speedup_b8": per_state[1] / per_state[8],
+            "b8_wins": per_state[8] < per_state[1],
+            "chosen_b1": chosen[1], "chosen_b8": chosen[8],
+        })
+    return rows
+
+
+def measure_serving(cells=MEASURE_CELLS, requests=MEASURE_REQUESTS):
+    """Warm serving-loop wall clock per state at max_batch 1 vs 8."""
+    suite = api.PAPER_SUITE()
+    rng = np.random.default_rng(0)
+    out = {}
+    for name in cells:
+        spec = suite[name]
+        states = [rng.normal(size=MEASURE_GRID).astype(np.float32)
+                  for _ in range(requests)]
+        row = {}
+        for mb in (1, 8):
+            server = api.StencilServer(spec, MEASURE_STEPS,
+                                       max_batch=mb, backends=["jnp"])
+            server.serve(states)               # cold: plans + compiles
+            t0 = time.perf_counter()
+            server.serve(states)               # warm: pure cache hits
+            warm = time.perf_counter() - t0
+            s = server.stats()
+            assert s["plan_cache"]["misses"] <= 2, s  # one bucket per pass
+            row[f"warm_per_state_us_b{mb}"] = warm / requests * 1e6
+        row["measured_amortization"] = (row["warm_per_state_us_b1"]
+                                        / row["warm_per_state_us_b8"])
+        out[name] = row
+    return out
+
+
+def emit_json(path="BENCH_serve.json", steps=MODEL_STEPS):
+    cells = model_cells(steps=steps)
+    wins = sorted(c["cell"] for c in cells if c["b8_wins"])
+    data = {
+        "bench_version": BENCH_VERSION,
+        "plan_version": api.PLAN_VERSION,
+        "hw": "tpu_v5e",
+        "steps": steps,
+        "batches": list(BATCHES),
+        "cells": cells,
+        "b8_wins": wins,
+        "n_b8_wins": len(wins),
+        "measured": measure_serving(),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}: {len(wins)}/{len(cells)} cells model a strict "
+          f"per-state win at B=8")
+    return data
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable BENCH_serve.json")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.json:
+        emit_json(args.out)
+        return
+    print("cell,per_state_ns_b1,per_state_ns_b8,speedup_b8,b8_wins,"
+          "strategy_b8,depth_b8")
+    for r in model_cells():
+        ch = r["chosen_b8"]
+        print(f"{r['cell']},{r['per_state_s']['1'] * 1e9:.1f},"
+              f"{r['per_state_s']['8'] * 1e9:.1f},{r['speedup_b8']:.3f},"
+              f"{r['b8_wins']},{ch['strategy']},{ch['depth']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,12 +22,22 @@ compiled stepper exchanges a single ``T*r``-deep halo once per fused chunk
 :func:`register_backend` and are scored by the same cost model; see
 DESIGN.md §Autotune for the block-search space and the calibration record
 schema, and README.md for a runnable tour of this module.
+
+Serving: ``StencilProblem(batch=B)`` makes the batch a planner-visible
+dimension (folded into the kernels' MXU contractions, priced per STATE by
+the cost model); :class:`PlanCache` memoizes compiled executables by
+everything that changes them, and :class:`StencilServer` buckets a
+variable-size request stream onto both (DESIGN.md §Batch):
+
+    server = api.StencilServer(api.box(2, 1), steps=8, max_batch=8)
+    evolved = server.serve(list_of_states)
 """
 from __future__ import annotations
 
 from repro.core.engine import (Backend, StencilEngine, backend_names,
                                choose_cover, default_block, get_backend,
                                legal_covers, register_backend)
+from repro.core.plan_cache import CachedExecutable, PlanCache, cache_key
 from repro.core.planner import (CandidateCost, CompiledStencil, ExecutionPlan,
                                 FUSE_STRATEGIES, PLAN_VERSION, StencilProblem,
                                 best_block, candidate_blocks, candidate_cost,
@@ -36,6 +46,7 @@ from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
                                      from_gather_coeffs, star)
 from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
                                     calibrate, measure_candidate)
+from repro.launch.serve_stencil import ServeStats, StencilServer
 
 compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
 #                         inside this namespace only, by design)
@@ -46,6 +57,8 @@ __all__ = [
     "best_block", "FUSE_STRATEGIES", "PLAN_VERSION",
     "CalibrationRecord", "CandidateMeasurement", "calibrate",
     "measure_candidate",
+    "PlanCache", "CachedExecutable", "cache_key",
+    "StencilServer", "ServeStats",
     "StencilEngine", "Backend", "register_backend", "get_backend",
     "backend_names", "choose_cover", "legal_covers", "default_block",
     "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs",

@@ -277,6 +277,7 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
                                    boundary: str = "periodic",
                                    block: tuple[int, ...] | None = None,
                                    fuse_strategy: str = "operator",
+                                   batch: int | None = None,
                                    overlap: bool = True,
                                    interpret: bool = True) -> DistributedStepper:
     """Build the fused multi-device sweep: one ``t*r`` exchange per chunk.
@@ -293,6 +294,13 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
     haloed block the fused operator would, so it still costs ONE exchange
     per chunk, and the Dirichlet-0 strips re-evolve through the same
     unfused base core.
+
+    ``batch`` adds a leading replicated batch axis of that extent: B
+    independent states advance through the same schedule in one call.
+    Batched states are spatially independent, so the halo layer and the
+    exchange protocol are untouched — each chunk still issues exactly ONE
+    ``t*r``-deep exchange (the ppermuted strips simply carry a batch
+    axis), and the chunk cores fold the batch into their MXU contractions.
     """
     if boundary not in ("periodic", "zero"):
         raise ValueError("distributed sweeps need boundary='periodic'|'zero'")
@@ -302,6 +310,8 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
     schedule = tuple(int(t) for t in schedule)
     if any(t < 1 for t in schedule):
         raise ValueError(f"chunk depths must be >= 1, got {schedule}")
+    if batch is not None and batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     periodic = boundary == "periodic"
 
     base = StencilEngine(spec, option=option, backend=backend, block=block,
@@ -320,8 +330,10 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
             cores[t] = fused._core
 
     grid_axes = tuple(grid_axes)
-    mesh_axes = {i: ax for i, ax in enumerate(grid_axes) if ax}
-    pspec = P(*[ax if ax else None for ax in grid_axes])
+    lead = 0 if batch is None else 1
+    # mesh_axes keys are ARRAY axes: spatial index + the batch lead offset
+    mesh_axes = {i + lead: ax for i, ax in enumerate(grid_axes) if ax}
+    pspec = P(*([None] * lead + [ax if ax else None for ax in grid_axes]))
 
     def local_fn(b):
         for t in schedule:

@@ -171,7 +171,10 @@ def register_backend(name: str, builder: Callable, *,
     ``sweep_builder(plan, steps, **opts)`` optionally supplies an in-kernel
     temporal-blocking core (T base steps per call, shrinking each spatial
     axis by ``2*steps*order``); registering one makes the backend eligible
-    for the planner's ``fuse_strategy="inkernel"`` candidates.
+    for the planner's ``fuse_strategy="inkernel"`` candidates.  ``opts``
+    carries ``interpret`` and the VMEM ``scratch`` policy
+    (``temporal.SCRATCH_MODES``) — accept ``**opts`` so new options stay
+    backward-compatible.
 
     Raises ``ValueError`` on duplicate names unless ``overwrite=True``.
     """
@@ -219,9 +222,11 @@ def _pallas_builder(plan: StencilPlan, *, interpret: bool = True,
 
 
 def _pallas_sweep_builder(plan: StencilPlan, steps: int, *,
-                          interpret: bool = True, **_opts) -> Callable:
+                          interpret: bool = True,
+                          scratch: str = "pingpong", **_opts) -> Callable:
     from repro.kernels import ops as kops
-    return kops.pallas_sweep_core(plan, steps, interpret=interpret)
+    return kops.pallas_sweep_core(plan, steps, interpret=interpret,
+                                  scratch=scratch)
 
 
 register_backend("jnp", _jnp_builder, mxu_efficiency=0.7)
@@ -250,7 +255,8 @@ class StencilEngine:
     def __init__(self, spec: StencilSpec, option: str = "auto",
                  backend: str = "jnp", block: tuple[int, ...] | None = None,
                  unroll: tuple[int, ...] | None = None,
-                 boundary: str = "valid", interpret: bool = True):
+                 boundary: str = "valid", interpret: bool = True,
+                 scratch: str = "pingpong"):
         if block is None:
             block = default_block(spec)
         if option == "auto":
@@ -264,11 +270,17 @@ class StencilEngine:
                                 unroll=tuple(unroll),
                                 boundary=halo.check_boundary(boundary))
         self.interpret = interpret
+        self.scratch = temporal.check_scratch(scratch)
         self._core = self._build_core()
         self._fn = halo.wrap_boundary(self._core, spec.order, spec.ndim,
                                       boundary)
+        # compiled-core caches: keys carry EVERY argument that changes the
+        # built core beyond the engine's own frozen plan — fused_engine
+        # keys the depth (the cover option is compatibility-checked and
+        # rebuilt on mismatch), inkernel_core keys (depth, scratch policy).
+        # A new knob must join the key, never alias an existing entry.
         self._fused_engines: dict[int, "StencilEngine"] = {}
-        self._inkernel_cores: dict[int, Callable] = {}
+        self._inkernel_cores: dict[tuple[int, str], Callable] = {}
 
     @classmethod
     def from_execution_plan(cls, eplan, interpret: bool = True) -> "StencilEngine":
@@ -462,7 +474,8 @@ class StencilEngine:
                                 option=option, backend=self.plan.backend,
                                 block=self.plan.block,
                                 boundary=self.plan.boundary,
-                                interpret=self.interpret)
+                                interpret=self.interpret,
+                                scratch=self.scratch)
             self._fused_engines[t] = eng
         return eng
 
@@ -471,28 +484,44 @@ class StencilEngine:
         """Whether this engine's backend registers an in-kernel sweep."""
         return get_backend(self.plan.backend).sweep_builder is not None
 
-    def inkernel_core(self, t: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def inkernel_core(self, t: int, scratch: str | None = None
+                      ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """The backend's t-step in-kernel temporal-blocking core (cached).
 
         A valid-mode callable shrinking each spatial axis by ``2*t*order``
         — the exact contract of the t-fused operator's core, so the halo
         layer, the Dirichlet-0 strip splice, and the distributed deep-halo
-        protocol drive either interchangeably.
+        protocol drive either interchangeably.  ``scratch`` overrides the
+        engine's VMEM intermediate policy for this core; it is part of
+        the cache key (a "single" core and a "pingpong" core compile
+        differently and must never alias).
         """
-        core = self._inkernel_cores.get(t)
+        scratch = temporal.check_scratch(scratch or self.scratch)
+        key = (t, scratch)
+        core = self._inkernel_cores.get(key)
         if core is None:
             be = get_backend(self.plan.backend)
             if be.sweep_builder is None:
                 raise ValueError(
                     f"backend {self.plan.backend!r} registers no "
                     f"sweep_builder; fuse_strategy='inkernel' needs one")
-            core = be.sweep_builder(self.plan, t, interpret=self.interpret)
-            self._inkernel_cores[t] = core
+            core = be.sweep_builder(self.plan, t, interpret=self.interpret,
+                                    scratch=scratch)
+            self._inkernel_cores[key] = core
         return core
 
     def _chunk_fn(self, t: int,
                   strategy: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
-        """Shape-preserving t-step chunk update (boundary-lifted)."""
+        """Shape-preserving t-step chunk update (boundary-lifted).
+
+        Unknown strategies fail HERE with a ValueError (not a silent
+        fall-through to operator fusion): this is the last gate every
+        chunk execution passes, including strategies read back from a
+        serialized plan.
+        """
+        if strategy not in temporal.FUSE_STRATEGIES:
+            raise ValueError(f"unknown fuse strategy {strategy!r}; choose "
+                             f"from {temporal.FUSE_STRATEGIES}")
         if strategy == "inkernel":
             spec = self.plan.spec
             return halo.wrap_boundary(self.inkernel_core(t), t * spec.order,

@@ -44,9 +44,32 @@ __all__ = [
     "inkernel_hbm_bytes",
     "inkernel_vmem_bytes",
     "block_hbm_bytes",
+    "batched_mxu_flops",
+    "batched_inkernel_mxu_flops",
+    "batched_hbm_bytes",
+    "batched_vmem_bytes",
+    "MXU_ROWS",
     "VMEM_BYTES",
     "VMEM_BUDGET",
+    "SCRATCH_MODES",
+    "check_scratch",
 ]
+
+#: VMEM scratch policies of the in-kernel sweep: "pingpong" double-buffers
+#: the intermediate slab (reads never target the buffer being written even
+#: if Mosaic pipelines the steps); "single" reuses ONE buffer — each
+#: step's input is fully materialized as a value before the write-back, so
+#: one suffices at half the scratch residency.  Defined here (the lowest
+#: layer that models the residency) and re-exported by ``temporal`` next
+#: to the other temporal-blocking policy constants.
+SCRATCH_MODES = ("pingpong", "single")
+
+
+def check_scratch(scratch: str) -> str:
+    if scratch not in SCRATCH_MODES:
+        raise ValueError(f"unknown scratch mode {scratch!r}; choose from "
+                         f"{SCRATCH_MODES}")
+    return scratch
 
 # v5e/v5p VMEM per core, and the fraction of it a kernel instance's tile
 # residency may claim (the rest is Toeplitz operators + slack).  Shared by
@@ -278,17 +301,22 @@ def inkernel_hbm_bytes(block: tuple[int, ...], steps: int, order: int,
 
 def inkernel_vmem_bytes(block: tuple[int, ...], steps: int, order: int,
                         dtype_bytes: int = 4,
-                        cover: LineCover | None = None) -> float:
+                        cover: LineCover | None = None,
+                        batch: int = 1,
+                        scratch: str = "pingpong") -> float:
     """VMEM residency of one in-kernel chunk instance: the ``T*r``-deep
-    input slab + the output tile (at the problem dtype), the
-    double-buffered f32 scratch pair at the deepest intermediate extent,
-    and — when the ``cover`` is known — every step's stacked banded
-    Toeplitz operators (all are broadcast kernel inputs, resident
-    simultaneously, and can dominate at large blocks).  The planner's and
-    the temporal chooser's shared feasibility bound for
-    fuse_strategy="inkernel"."""
+    input slab + the output tile (at the problem dtype, per batched
+    state), the f32 scratch at the deepest intermediate extent (a
+    double-buffered pair for ``scratch="pingpong"``, ONE buffer — half
+    the scratch residency — for ``scratch="single"``; batched alongside
+    the states), and — when the ``cover`` is known — every step's stacked
+    banded Toeplitz operators (broadcast kernel inputs, resident
+    simultaneously, SHARED across the batch, and able to dominate at
+    large blocks).  The planner's and the temporal chooser's shared
+    feasibility bound for fuse_strategy="inkernel"."""
     if steps < 1:
         raise ValueError("steps >= 1")
+    n_bufs = 1 if check_scratch(scratch) == "single" else 2
     slab = float(np.prod([b + 2 * steps * order for b in block]))
     buf = float(np.prod([b + 2 * (steps - 1) * order for b in block]))
     out = float(np.prod(block))
@@ -300,7 +328,8 @@ def inkernel_vmem_bytes(block: tuple[int, ...], steps: int, order: int,
             for s in range(steps):
                 n = block[line.axis] + 2 * (steps - 1 - s) * order
                 ops += n * (n + 2 * order)
-    return dtype_bytes * (slab + out) + 4 * (2 * buf + ops)
+    return (batch * dtype_bytes * (slab + out)
+            + 4 * (n_bufs * batch * buf + ops))
 
 
 def block_hbm_bytes(block: tuple[int, ...], halo_width: int,
@@ -313,3 +342,106 @@ def block_hbm_bytes(block: tuple[int, ...], halo_width: int,
     read = float(np.prod([b + 2 * halo_width for b in block]))
     write = float(np.prod(block))
     return dtype_bytes * (read + write)
+
+
+# ---------------------------------------------------------------------------
+# Batched execution (§4.3 input-vector sharing across independent states):
+# B states share one kernel instance, one set of Toeplitz band operands and
+# ONE dot_general per axis — the states' grid lines stack into the
+# contraction's non-contracted matmul dimension.
+# ---------------------------------------------------------------------------
+
+#: MXU systolic-array pass granule: each of a matmul's two free
+#: dimensions is processed in tiles of this extent, so the slab operand's
+#: non-contracted dimension of ``m`` lines occupies ``ceil(m / 128) *
+#: 128`` pass slots (the array is symmetric in its free dimensions —
+#: "batch-in-M" names the filling of these slots, whichever operand side
+#: carries them).
+MXU_ROWS = 128
+
+
+def _mxu_row_pad(rows: int) -> int:
+    return int(-(-int(rows) // MXU_ROWS) * MXU_ROWS)
+
+
+def _batched_line_scale(m_rows: int, batch: int) -> float:
+    """Issue-slot ratio of the B-stacked contraction vs B separate ones.
+
+    A single state contributes ``m_rows`` slab lines to the slab-side
+    non-contracted dimension of the per-axis ``dot_general``; the MXU
+    pads that dimension to the 128-slot pass granule.  Stacking B states
+    into the same contraction pads ONCE for ``B * m_rows`` lines instead
+    of B times for ``m_rows``, so the modelled flops scale by
+    ``pad(B*m) / (B * pad(m)) * B`` — exactly ``B`` when ``m_rows`` is
+    granule-aligned, strictly less than ``B`` otherwise (the idle pass
+    slots the batch fills).  Reduces to 1.0 at ``batch=1`` so the
+    batched model is a strict refinement.
+    """
+    if batch <= 1:
+        return 1.0
+    return _mxu_row_pad(batch * m_rows) / float(_mxu_row_pad(m_rows))
+
+
+def batched_mxu_flops(cover: LineCover, block: tuple[int, ...],
+                      batch: int = 1) -> float:
+    """MXU flops for B states sharing one instance's cover application.
+
+    Multi-tap lines scale by :func:`_batched_line_scale` of the per-state
+    slab line count (the haloed extents of the non-contracted axes);
+    single-tap/diagonal taps are VPU work and scale linearly.  Equals
+    :func:`mxu_flops` exactly at ``batch=1``.
+    """
+    r = cover.spec.order
+    total = 0.0
+    for line in cover.lines:
+        if line.is_diagonal or line.nnz <= 1:
+            total += 2 * int(np.prod(block)) * max(line.nnz, 1) * batch
+            continue
+        ax = line.axis
+        n = block[ax]
+        rest = int(np.prod([b for a, b in enumerate(block) if a != ax]))
+        m_rows = int(np.prod([b + 2 * r for a, b in enumerate(block)
+                              if a != ax]))
+        total += 2 * n * (n + 2 * r) * rest * _batched_line_scale(m_rows,
+                                                                  batch)
+    return total
+
+
+def batched_inkernel_mxu_flops(cover: LineCover, block: tuple[int, ...],
+                               steps: int, batch: int = 1) -> float:
+    """Batched analogue of :func:`inkernel_mxu_flops`: ``steps`` in-kernel
+    applications of the BASE cover over the B-state live slab (per-step
+    extents shrink exactly as in the single-state kernel).  Equals
+    :func:`inkernel_mxu_flops` at ``batch=1``."""
+    if steps < 1:
+        raise ValueError("steps >= 1")
+    r = cover.spec.order
+    total = 0.0
+    for s in range(steps):
+        ext = tuple(b + 2 * (steps - 1 - s) * r for b in block)
+        total += batched_mxu_flops(cover, ext, batch)
+    return total
+
+
+def batched_hbm_bytes(block: tuple[int, ...], halo_width: int,
+                      dtype_bytes: int = 4, batch: int = 1) -> float:
+    """HBM bytes for one B-state block update: every state carries its own
+    haloed read and write-back (states are independent grids), so traffic
+    is linear in B — the batch win on the traffic side is the amortized
+    per-chunk dispatch overhead, not fewer bytes."""
+    return batch * block_hbm_bytes(block, halo_width, dtype_bytes)
+
+
+def batched_vmem_bytes(block: tuple[int, ...], halo_width: int,
+                       dtype_bytes: int = 4, batch: int = 1) -> float:
+    """VMEM residency of one B-state instance (haloed slab + output tile
+    per state) — the block search's feasibility bound for batched
+    problems.  Toeplitz operands are shared across the batch and accounted
+    by the inkernel bound where they matter.
+
+    Numerically this equals :func:`batched_hbm_bytes` today — the
+    haloed-read + write-back traffic of a chunk IS the slab + tile the
+    instance holds resident — so it delegates rather than restating the
+    formula: refining either model keeps the other honest.
+    """
+    return batched_hbm_bytes(block, halo_width, dtype_bytes, batch)

@@ -1,0 +1,204 @@
+"""Keyed plan + executable cache: plan once, compile once, serve forever.
+
+Serving traffic repeats: the same (operator, grid shape, dtype, step
+count, batch bucket) arrives over and over, and re-running ``plan()``
+(cost-table enumeration) plus ``compile()`` (engine construction, kernel
+planning, jit tracing) per request would dwarf the sweep itself.  This
+module provides the memoization layer the serving loop
+(:mod:`repro.launch.serve_stencil`) sits on:
+
+  * :func:`cache_key` — ONE definition of executable identity: the spec's
+    coefficient bytes, grid shape, dtype, boundary, steps, batch, the
+    hardware model, the calibration record (by digest) and every planner
+    pin.  Anything that can change the compiled core is in the key; two
+    problems with equal keys are interchangeable executables.
+  * :class:`PlanCache` — a bounded LRU mapping keys to
+    :class:`CachedExecutable` (the frozen plan, the compiled stencil and
+    a jitted entry point), with hit/miss/eviction counters.  A second
+    identical request is a counter-visible hit that re-plans nothing and
+    re-traces nothing (the jitted fn is reused, so ``fn._cache_size()``
+    stays 1).
+
+The cache is a plain in-process object — share one per server; create
+fresh ones in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from collections import OrderedDict
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+import jax
+
+from repro.core.planner import (CompiledStencil, ExecutionPlan, PLAN_VERSION,
+                                StencilProblem, _calibration_dict,
+                                compile_plan, plan)
+
+__all__ = ["PlanCache", "CachedExecutable", "cache_key"]
+
+
+def _spec_digest(spec) -> str:
+    """Stable identity of a stencil operator: coefficient bytes + tag."""
+    c = np.ascontiguousarray(np.asarray(spec.gather_coeffs, np.float64))
+    h = hashlib.sha1(c.tobytes())
+    h.update(str(c.shape).encode())
+    h.update(spec.shape.encode())
+    return h.hexdigest()[:16]
+
+
+def _calibration_digest(calibration) -> str:
+    if calibration is None:
+        return "-"
+    d = _calibration_dict(calibration)
+    return hashlib.sha1(
+        json.dumps(d, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _freeze(v: Any):
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, Mapping):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    return v
+
+
+_HW_FIELDS = ("name", "peak_flops_bf16", "hbm_bw", "ici_bw", "hbm_bytes",
+              "launch_overhead_s")
+
+
+def _hw_key(hw) -> tuple | None:
+    """Hardware identity by PARAMETERS, not just name: two specs sharing a
+    name but differing in any roofline constant (e.g. a
+    ``launch_overhead_s`` override) must not alias executables."""
+    if hw is None:
+        return None
+    return tuple((f, getattr(hw, f, None)) for f in _HW_FIELDS)
+
+
+def cache_key(problem: StencilProblem, *, hw=None, calibration=None,
+              **plan_kwargs) -> tuple:
+    """Executable identity of a problem + planning context.
+
+    Everything that changes what ``compile(plan(problem, ...))`` builds is
+    keyed: the operator (by coefficient digest), grid, dtype, boundary,
+    steps, batch, mesh decomposition, the hardware model (by its roofline
+    parameters, not just its name), the calibration record (by content
+    digest — a re-measured record is a new executable) and every planner
+    pin (``fuse=``, ``backends=``, ``block=``, ``fuse_strategy=``, ...).
+    PLAN_VERSION leads the tuple so a cache can never serve a
+    stale-format plan across an upgrade.
+    """
+    sharding = None
+    if problem.mesh is not None:
+        sharding = (tuple(int(n) for n in problem.mesh.devices.shape),
+                    tuple(problem.mesh.axis_names),
+                    tuple(problem.grid_axes))
+    return (
+        PLAN_VERSION,
+        _spec_digest(problem.spec),
+        problem.grid,
+        str(problem.dtype),
+        problem.boundary,
+        int(problem.steps),
+        int(problem.batch),
+        sharding,
+        _hw_key(hw),
+        _calibration_digest(calibration),
+        _freeze(plan_kwargs),
+    )
+
+
+@dataclasses.dataclass
+class CachedExecutable:
+    """One cache entry: the frozen decision record plus its executable.
+
+    ``fn`` is the jitted entry point (already-jitted stepper for
+    distributed plans); calling it with the same input shape never
+    re-traces.  ``hits`` counts how many cache lookups this entry served
+    after the compiling miss; ``calls`` counts SUCCESSFUL executions
+    (the serving loop uses it to separate each executable's first
+    trace+compile call from warm sweeps in its timing, so it is bumped
+    only after a call returns — a failed first call stays cold).
+    """
+
+    key: tuple
+    plan: ExecutionPlan
+    compiled: CompiledStencil
+    fn: Callable
+    hits: int = 0
+    calls: int = 0
+
+    def __call__(self, x):
+        out = self.fn(x)
+        self.calls += 1
+        return out
+
+
+class PlanCache:
+    """Bounded LRU of compiled stencil executables with observable counters.
+
+    ``get(problem, **plan_kwargs)`` returns a :class:`CachedExecutable`,
+    planning + compiling + jitting only on a miss.  ``maxsize`` bounds the
+    entry count (least-recently-used plans are evicted — their jit caches
+    go with them, so a bounded serving process cannot accumulate
+    executables without bound).
+    """
+
+    def __init__(self, maxsize: int = 32, hw=None, interpret: bool = True):
+        if maxsize < 1:
+            raise ValueError("maxsize >= 1")
+        self.maxsize = int(maxsize)
+        self._hw = hw
+        self._interpret = interpret
+        self._entries: OrderedDict[tuple, CachedExecutable] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def get(self, problem: StencilProblem, *, calibration=None,
+            mesh=None, **plan_kwargs) -> CachedExecutable:
+        """The compiled executable for ``problem``, memoized.
+
+        ``plan_kwargs`` pass through to :func:`repro.core.planner.plan`
+        (and join the key); ``mesh`` is only needed to materialize a
+        distributed plan's stepper and is NOT part of the key beyond the
+        problem's own mesh decomposition.
+        """
+        key = cache_key(problem, hw=self._hw, calibration=calibration,
+                        **plan_kwargs)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            entry.hits += 1
+            return entry
+        self.misses += 1
+        p = plan(problem, self._hw, calibration=calibration, **plan_kwargs)
+        compiled = compile_plan(p, mesh=mesh, interpret=self._interpret)
+        # distributed steppers are already jitted; jit single-device fns
+        # here so a repeated request cannot re-trace either
+        fn = compiled.fn if p.sharding is not None else jax.jit(compiled.fn)
+        entry = CachedExecutable(key=key, plan=p, compiled=compiled, fn=fn)
+        self._entries[key] = entry
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def stats(self) -> dict:
+        return {"size": len(self._entries), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+    def clear(self) -> None:
+        self._entries.clear()

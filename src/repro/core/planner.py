@@ -80,11 +80,20 @@ from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 __all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
            "CompiledStencil", "plan", "compile_plan", "candidate_cost",
            "candidate_blocks", "best_block", "factor_key",
-           "FUSE_STRATEGIES", "PLAN_VERSION"]
+           "FUSE_STRATEGIES", "PLAN_VERSION", "LAUNCH_OVERHEAD_S"]
 
-PLAN_VERSION = 3
+PLAN_VERSION = 4
 
 FUSE_STRATEGIES = temporal.FUSE_STRATEGIES
+
+#: Modelled per-fused-chunk dispatch overhead (seconds): kernel launch,
+#: grid setup and the band-operand fetch that one chunk pays regardless of
+#: how many states it advances.  This is the serving-side term batching
+#: amortizes — per STATE it is ``LAUNCH_OVERHEAD_S / (depth * batch)`` —
+#: and it is deliberately small against the roofline terms at the report
+#: grids so it refines rather than dominates the decision.  Hardware specs
+#: may override it via a ``launch_overhead_s`` attribute.
+LAUNCH_OVERHEAD_S = 2e-7
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +115,14 @@ class StencilProblem:
         single-step/sweep only, and never distributed).
       steps: how many stencil applications ``compile(plan(...))`` advances
         per call (0 = identity; the fuse schedule covers them exactly).
+      batch: how many independent states one compiled call advances
+        together (a leading batch axis of the executable's input).  The
+        batch is planner-visible — it scales the roofline terms, fills
+        the MXU rows a single small grid leaves idle
+        (``matrixization.batched_mxu_flops``), amortizes the per-chunk
+        dispatch overhead, and tightens the VMEM feasibility bounds — and
+        is folded into the kernels' contractions, NOT vmapped (the
+        per-axis dot count is independent of it).
       mesh / grid_axes: set together or not at all.  ``mesh`` is a
         ``jax.sharding.Mesh``; ``grid_axes`` names one mesh axis per
         spatial axis ('' for unsharded).  When set, planning is per
@@ -124,6 +141,7 @@ class StencilProblem:
     dtype: str = "float32"
     boundary: str = "periodic"
     steps: int = 1
+    batch: int = 1
     mesh: Any | None = None
     grid_axes: tuple[str, ...] | None = None
 
@@ -135,6 +153,9 @@ class StencilProblem:
                              f"a {self.spec.ndim}-D spec")
         if self.steps < 0:
             raise ValueError("steps >= 0")
+        object.__setattr__(self, "batch", int(self.batch))
+        if self.batch < 1:
+            raise ValueError("batch >= 1")
         if (self.mesh is None) != (self.grid_axes is None):
             raise ValueError("mesh and grid_axes must be given together")
         if self.grid_axes is not None:
@@ -177,6 +198,7 @@ class StencilProblem:
             "dtype": self.dtype,
             "boundary": self.boundary,
             "steps": int(self.steps),
+            "batch": int(self.batch),
         }
 
 
@@ -190,27 +212,33 @@ class CandidateCost:
     candidate.
 
     ``t_compute`` / ``t_traffic`` / ``t_comm`` are the CALIBRATED seconds
-    per fused sweep (equal to the raw modelled terms when the plan carries
-    no calibration); ``t_per_step`` ranks the table.  ``t_model`` always
-    holds the uncalibrated per-step score, so a calibrated plan renders
-    modelled-vs-measured drift per row.  ``strategy`` is the temporal
-    execution of the chunk ("operator" fused-operator flops, "inkernel"
-    linear-in-T flops; for "inkernel" rows ``option`` names the BASE
-    cover applied at every step).
+    per fused sweep of the WHOLE batch (equal to the raw modelled terms
+    when the plan carries no calibration); ``t_launch`` is the per-chunk
+    dispatch overhead (uncalibrated, additive — serial with the sweep);
+    ``t_per_step`` ranks the table and is normalized PER STATE per step:
+    ``(max(compute, traffic, comm) + launch) / (depth * batch)`` — the
+    quantity the serving loop's throughput inverts.  ``t_model`` always
+    holds the uncalibrated per-state-step score, so a calibrated plan
+    renders modelled-vs-measured drift per row.  ``strategy`` is the
+    temporal execution of the chunk ("operator" fused-operator flops,
+    "inkernel" linear-in-T flops; for "inkernel" rows ``option`` names
+    the BASE cover applied at every step).
     """
     depth: int
     option: str
     backend: str
     block: tuple[int, ...]  # output tile this row was scored at
-    mxu_flops: float        # per fused sweep over the local grid
-    hbm_bytes: float        # per fused sweep over the local grid
-    ici_bytes: float        # per fused chunk (deep halo exchange)
+    mxu_flops: float        # per fused sweep over the local grid (all states)
+    hbm_bytes: float        # per fused sweep over the local grid (all states)
+    ici_bytes: float        # per fused chunk (deep halo exchange, all states)
     t_compute: float        # seconds per sweep
     t_traffic: float
     t_comm: float
-    t_model: float          # UNcalibrated max(compute, traffic, comm)/depth
-    t_per_step: float       # calibrated max(compute, traffic, comm) / depth
+    t_model: float          # UNcalibrated (max(c, t, m) + launch)/(depth*B)
+    t_per_step: float       # calibrated (max(c, t, m) + launch)/(depth*B)
     strategy: str = "operator"
+    batch: int = 1          # states advanced together (problem.batch)
+    t_launch: float = LAUNCH_OVERHEAD_S   # per-chunk dispatch overhead
 
     @property
     def key(self) -> tuple:
@@ -270,33 +298,40 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec | None, depth: int,
                sharded_axes: Sequence[int], boundary: str,
                base_flops: float, dtype_bytes: int, hw,
                calib: Mapping | None = None,
-               strategy: str = "operator") -> CandidateCost:
+               strategy: str = "operator",
+               batch: int = 1) -> CandidateCost:
     be = get_backend(backend)
     if strategy == "inkernel":
         # T base-radius steps in VMEM: flops linear in T (plus the
         # shrinking-halo overhead); ``cover`` is the BASE cover here.
-        flops_block = mx.inkernel_mxu_flops(cover, block, depth)
+        # Batched: the B states share every per-step contraction.
+        flops_block = mx.batched_inkernel_mxu_flops(cover, block, depth,
+                                                    batch)
     elif be.flops_model is not None:
-        flops_block = be.flops_model(fspec, block)
+        # cover-free backends price per state; no M-fill model for them
+        flops_block = be.flops_model(fspec, block) * batch
     else:
-        flops_block = mx.mxu_flops(cover, block)
+        flops_block = mx.batched_mxu_flops(cover, block, batch)
     nb = _n_blocks(local_grid, block)
     flops = float(flops_block) * nb
     if boundary == "zero" and depth > 1:
         # Dirichlet-0 strip fixups: 2 strips per axis, each re-evolved by
         # `depth` unfused steps over a 3*T*r-deep slab (see
         # distributed.distributed_fused_chunk) — modelled as that fraction
-        # of `depth` full unfused sweeps.  Both strategies share the fixup.
+        # of `depth` full unfused sweeps.  Both strategies share the fixup;
+        # every batched state pays it.
         frac = min(1.0, 3 * depth * spec.order / min(local_grid))
-        flops += 2 * spec.ndim * depth * frac * base_flops
-    # one T*r-deep haloed read + one write per chunk — identical traffic
-    # for both strategies (in-kernel intermediates never touch HBM)
-    bytes_hbm = mx.block_hbm_bytes(block, depth * spec.order,
-                                   dtype_bytes) * nb
+        flops += 2 * spec.ndim * depth * frac * base_flops * batch
+    # one T*r-deep haloed read + one write per chunk PER STATE — identical
+    # traffic for both strategies (in-kernel intermediates never touch HBM)
+    bytes_hbm = mx.batched_hbm_bytes(block, depth * spec.order,
+                                     dtype_bytes, batch) * nb
     ici = 0.0
     for a in sharded_axes:
         face = float(np.prod([g for i, g in enumerate(local_grid) if i != a]))
-        ici += 2 * depth * spec.order * face * dtype_bytes
+        ici += 2 * depth * spec.order * face * dtype_bytes * batch
+    t_launch = float(getattr(hw, "launch_overhead_s", LAUNCH_OVERHEAD_S))
+    per = depth * batch
     t_compute_raw = flops / (hw.peak_flops_bf16 * be.mxu_efficiency)
     t_traffic_raw = bytes_hbm / hw.hbm_bw
     t_comm = ici / hw.ici_bw if ici else 0.0
@@ -310,13 +345,14 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec | None, depth: int,
     else:
         t_compute, t_traffic = t_compute_raw, t_traffic_raw
     return CandidateCost(depth=depth, option=option, backend=backend,
-                         block=tuple(block), strategy=strategy,
+                         block=tuple(block), strategy=strategy, batch=batch,
                          mxu_flops=flops, hbm_bytes=bytes_hbm, ici_bytes=ici,
                          t_compute=t_compute, t_traffic=t_traffic,
-                         t_comm=t_comm,
-                         t_model=max(t_compute_raw, t_traffic_raw,
-                                     t_comm) / depth,
-                         t_per_step=max(t_compute, t_traffic, t_comm) / depth)
+                         t_comm=t_comm, t_launch=t_launch,
+                         t_model=(max(t_compute_raw, t_traffic_raw, t_comm)
+                                  + t_launch) / per,
+                         t_per_step=(max(t_compute, t_traffic, t_comm)
+                                     + t_launch) / per)
 
 
 # ---------------------------------------------------------------------------
@@ -340,11 +376,13 @@ _ALIGNED_EXTENTS = {
 
 
 def _ranked_blocks(spec: StencilSpec, local_grid: Sequence[int],
-                   hw, dtype_bytes: int, halo_width: int | None
+                   hw, dtype_bytes: int, halo_width: int | None,
+                   batch: int = 1
                    ) -> tuple[list[tuple[int, ...]], tuple[int, ...]]:
     """Shared enumeration for :func:`candidate_blocks` / :func:`best_block`:
     (every feasible aligned tile in roofline-score order — best first,
-    the clipped default block)."""
+    the clipped default block).  ``batch`` scales the VMEM feasibility
+    bound: a batched instance holds every state's haloed tile."""
     nd = spec.ndim
     r = spec.order
     if halo_width is None:
@@ -361,17 +399,23 @@ def _ranked_blocks(spec: StencilSpec, local_grid: Sequence[int],
 
     bytes_of = {blk: mx.block_hbm_bytes(blk, halo_width, dtype_bytes)
                 for blk in blocks}
-    feasible = sorted(b for b in blocks
-                      if bytes_of[b] <= _VMEM_BUDGET) or [default]
+    feasible = sorted(
+        b for b in blocks
+        if mx.batched_vmem_bytes(b, halo_width, dtype_bytes,
+                                 batch) <= _VMEM_BUDGET) or [default]
     covers = [cl.make_cover(spec, o) for o in legal_covers(spec)]
 
     def score(blk):
-        flops = min(mx.mxu_flops(cover, blk) for cover in covers)
+        # batch-aware: the M-fill term can shift the compute/traffic
+        # balance per tile, and the shortlist cut must see the same
+        # model the candidate loop scores with (per state, per element)
+        flops = min(mx.batched_mxu_flops(cover, blk, batch)
+                    for cover in covers)
         if nd == 2:
-            flops = min(flops, mx.separable_mxu_flops(spec, blk))
+            flops = min(flops, mx.separable_mxu_flops(spec, blk) * batch)
         t_c = flops / hw.peak_flops_bf16
-        t_t = bytes_of[blk] / hw.hbm_bw
-        return max(t_c, t_t) / float(np.prod(blk))
+        t_t = batch * bytes_of[blk] / hw.hbm_bw
+        return max(t_c, t_t) / float(batch * np.prod(blk))
 
     return sorted(feasible, key=lambda b: (score(b), b)), default
 
@@ -379,7 +423,8 @@ def _ranked_blocks(spec: StencilSpec, local_grid: Sequence[int],
 def candidate_blocks(spec: StencilSpec, local_grid: Sequence[int],
                      hw=None, dtype_bytes: int = 4, *,
                      halo_width: int | None = None,
-                     max_blocks: int = 4) -> list[tuple[int, ...]]:
+                     max_blocks: int = 4,
+                     batch: int = 1) -> list[tuple[int, ...]]:
     """MXU-aligned candidate output tiles for the planner's block search.
 
     Enumerates the cartesian product of lane/sublane-aligned per-axis
@@ -400,7 +445,7 @@ def candidate_blocks(spec: StencilSpec, local_grid: Sequence[int],
     if hw is None:
         hw = _default_hw()
     ranked, default = _ranked_blocks(spec, local_grid, hw, dtype_bytes,
-                                     halo_width)
+                                     halo_width, batch)
     keep = ranked[:max(1, int(max_blocks))]
     if default not in keep:
         keep[-1] = default
@@ -409,14 +454,16 @@ def candidate_blocks(spec: StencilSpec, local_grid: Sequence[int],
 
 def best_block(spec: StencilSpec, local_grid: Sequence[int],
                hw=None, dtype_bytes: int = 4, *,
-               halo_width: int | None = None) -> tuple[int, ...]:
+               halo_width: int | None = None,
+               batch: int = 1) -> tuple[int, ...]:
     """The top-ranked tile of the block search (the kernel wrappers'
     default when no block is pinned — see ``kernels.ops``): the same
     enumeration and roofline pruning as :func:`candidate_blocks`, returning
     the best-scoring tile instead of the sorted shortlist."""
     if hw is None:
         hw = _default_hw()
-    ranked, _ = _ranked_blocks(spec, local_grid, hw, dtype_bytes, halo_width)
+    ranked, _ = _ranked_blocks(spec, local_grid, hw, dtype_bytes, halo_width,
+                               batch)
     return ranked[0]
 
 
@@ -465,6 +512,13 @@ class ExecutionPlan:
     @property
     def steps(self) -> int:
         return int(self.problem["steps"])
+
+    @property
+    def batch(self) -> int:
+        # plans from PLAN_VERSION < 4 never serialized a batch; those
+        # cannot be deserialized here (version guard), so the key is
+        # always present — .get keeps hand-built problem dicts working
+        return int(self.problem.get("batch", 1))
 
     @property
     def boundary(self) -> str:
@@ -525,15 +579,17 @@ class ExecutionPlan:
         """Human-readable decision record with the modelled cost table.
 
         Column meanings (one row per enumerated candidate, best first):
-        ``depth`` fused-chunk length T, ``strat`` temporal strategy of the
-        chunk ("operator" fused-operator | "inkernel" T VMEM-resident base
-        steps), ``cover`` coefficient-line cover of the T-fused operator
-        (of the BASE operator for inkernel rows), ``backend`` registry
-        entry, ``block`` output tile the row was scored at,
-        ``t_compute``/``t_traffic``/``t_comm`` calibrated roofline seconds
-        per fused sweep, ``t/model`` the UNcalibrated per-step score,
-        ``t/step`` the calibrated per-step score the ranking minimizes (the
-        two columns coincide when the plan carries no calibration).
+        ``depth`` fused-chunk length T, ``batch`` states advanced together
+        (the problem's batch — every row of one plan shares it), ``strat``
+        temporal strategy of the chunk ("operator" fused-operator |
+        "inkernel" T VMEM-resident base steps), ``cover`` coefficient-line
+        cover of the T-fused operator (of the BASE operator for inkernel
+        rows), ``backend`` registry entry, ``block`` output tile the row
+        was scored at, ``t_compute``/``t_traffic``/``t_comm`` calibrated
+        roofline seconds per fused sweep of the whole batch, ``t/model``
+        the UNcalibrated per-state-step score, ``t/step`` the calibrated
+        per-STATE-per-step score the ranking minimizes (the two columns
+        coincide when the plan carries no calibration).
         """
         p = self.problem
         spec = self.spec
@@ -545,7 +601,7 @@ class ExecutionPlan:
         lines = [
             f"ExecutionPlan v{self.version}: {spec.describe()} | "
             f"grid={tuple(p['grid'])} {p['dtype']} | boundary={p['boundary']} "
-            f"| steps={p['steps']} | mesh={mesh_s}",
+            f"| steps={p['steps']} | batch={self.batch} | mesh={mesh_s}",
             f"hw {self.hw['name']}: {self.hw['peak_flops_bf16'] / 1e12:.0f} "
             f"TFLOP/s peak, {self.hw['hbm_bw'] / 1e9:.0f} GB/s HBM, "
             f"{self.hw['ici_bw'] / 1e9:.0f} GB/s ICI",
@@ -555,9 +611,12 @@ class ExecutionPlan:
             f"schedule={self.schedule_str()} "
             f"halo={self.halo_strategy} width={self.halo_width}",
             f"{'modelled' if self.calibration is None else 'calibrated'}"
-            f"/step: compute {ch.t_compute / ch.depth:.3e}s, "
-            f"traffic {ch.t_traffic / ch.depth:.3e}s, "
-            f"comm {ch.t_comm / ch.depth:.3e}s -> {ch.t_per_step:.3e}s",
+            f"/state-step: "
+            f"compute {ch.t_compute / (ch.depth * ch.batch):.3e}s, "
+            f"traffic {ch.t_traffic / (ch.depth * ch.batch):.3e}s, "
+            f"comm {ch.t_comm / (ch.depth * ch.batch):.3e}s, "
+            f"launch {ch.t_launch / (ch.depth * ch.batch):.3e}s "
+            f"-> {ch.t_per_step:.3e}s",
         ]
         if self.calibration is not None:
             cal = self.calibration
@@ -568,8 +627,8 @@ class ExecutionPlan:
             lines.append(f"calibrated ({cal.get('hw', '?')} measured, "
                          f"compute/traffic factors): {facts}")
         lines.append(
-            "  rank depth strat    cover       backend     block        "
-            "t_compute   t_traffic   t_comm      t/model     t/step")
+            "  rank depth batch strat    cover       backend     block    "
+            "    t_compute   t_traffic   t_comm      t/model     t/step")
         ranked = self.ranked()
         for i, c in enumerate(ranked[:top]):
             mark = "  <- chosen" if c.key == (
@@ -577,7 +636,7 @@ class ExecutionPlan:
                 self.fuse_strategy) else ""
             blk = "x".join(str(b) for b in c.block)
             lines.append(
-                f"  {i + 1:4d} {c.depth:5d} {c.strategy:<8s} "
+                f"  {i + 1:4d} {c.depth:5d} {c.batch:5d} {c.strategy:<8s} "
                 f"{c.option:<11s} {c.backend:<11s} "
                 f"{blk:<12s} "
                 f"{c.t_compute:.3e}   {c.t_traffic:.3e}   {c.t_comm:.3e}   "
@@ -592,9 +651,13 @@ class ExecutionPlan:
 # ---------------------------------------------------------------------------
 
 def _hw_dict(hw) -> dict:
+    # launch_overhead_s is recorded even at its default: every term that
+    # shaped the scores must be reconstructible from the plan JSON alone
     return {"name": hw.name, "peak_flops_bf16": float(hw.peak_flops_bf16),
             "hbm_bw": float(hw.hbm_bw), "ici_bw": float(hw.ici_bw),
-            "hbm_bytes": float(hw.hbm_bytes)}
+            "hbm_bytes": float(hw.hbm_bytes),
+            "launch_overhead_s": float(getattr(hw, "launch_overhead_s",
+                                               LAUNCH_OVERHEAD_S))}
 
 
 def _default_hw():
@@ -710,7 +773,8 @@ def plan(problem: StencilProblem, hw=None, *,
         blocks = [tuple(int(b) for b in block)]
     else:
         blocks = candidate_blocks(spec, local_grid, hw, problem.dtype_bytes,
-                                  max_blocks=max_blocks)
+                                  max_blocks=max_blocks,
+                                  batch=problem.batch)
     base_stats = {blk: _base_stats(spec, blk, local_grid, option)
                   for blk in blocks}
 
@@ -758,7 +822,7 @@ def plan(problem: StencilProblem, hw=None, *,
                             spec, fspec, t, opt, cover, nm, blk, local_grid,
                             sharded_axes, problem.boundary,
                             base_stats[blk][1], problem.dtype_bytes, hw,
-                            calib))
+                            calib, batch=problem.batch))
         if "inkernel" in strategies and t > 1:
             # T base-radius steps per kernel instance: the cover is the
             # BASE spec's (re-applied every step), only backends with a
@@ -775,13 +839,15 @@ def plan(problem: StencilProblem, hw=None, *,
                     for blk in blocks:
                         if mx.inkernel_vmem_bytes(
                                 blk, t, r, problem.dtype_bytes,
-                                cover=cover) > _VMEM_BUDGET:
+                                cover=cover,
+                                batch=problem.batch) > _VMEM_BUDGET:
                             continue
                         cands.append(_candidate(
                             spec, None, t, opt, cover, nm, blk, local_grid,
                             sharded_axes, problem.boundary,
                             base_stats[blk][1], problem.dtype_bytes, hw,
-                            calib, strategy="inkernel"))
+                            calib, strategy="inkernel",
+                            batch=problem.batch))
     if not cands:
         raise ValueError("no feasible (cover x backend x fuse x strategy) "
                          "candidate — check the backend/strategy pins "
@@ -865,7 +931,8 @@ def candidate_cost(problem: StencilProblem, depth: int, option: str,
     return _candidate(spec, fspec, depth, option, cover, backend, block,
                       local_grid, _sharded_axes(problem), problem.boundary,
                       base_flops, problem.dtype_bytes, hw,
-                      _calibration_dict(calibration), strategy=strategy)
+                      _calibration_dict(calibration), strategy=strategy,
+                      batch=problem.batch)
 
 
 # ---------------------------------------------------------------------------
@@ -893,6 +960,30 @@ class CompiledStencil:
         return self.fn(x)
 
 
+def _check_plan_input(x, grid: tuple[int, ...], nd: int, batch: int,
+                      exact_rank: bool = False) -> None:
+    """Shared shape gate of every compiled executable's entry point.
+
+    ``exact_rank`` is set by the distributed wrapper, whose sharding spec
+    has a fixed rank: there an unplanned extra leading axis must fail
+    HERE with a clear error, not deep inside shard_map.  Single-device
+    executables keep accepting ad-hoc leading axes at batch 1 (the
+    engine cores are lead-polymorphic, as before this PR).
+    """
+    if tuple(x.shape[x.ndim - nd:]) != grid:
+        raise ValueError(f"input spatial shape "
+                         f"{tuple(x.shape[x.ndim - nd:])} != planned "
+                         f"grid {grid}")
+    lead = tuple(x.shape[:x.ndim - nd])
+    if batch > 1 and lead != (batch,):
+        raise ValueError(f"plan expects a leading batch axis of "
+                         f"{batch}, got input shape {tuple(x.shape)}")
+    if batch <= 1 and exact_rank and lead:
+        raise ValueError(f"plan was compiled without a batch axis; got "
+                         f"input shape {tuple(x.shape)} with leading axes "
+                         f"{lead} (plan with batch={lead[0]} to batch)")
+
+
 def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
                  overlap: bool = True) -> CompiledStencil:
     """Materialize an ExecutionPlan into an executable.
@@ -904,6 +995,11 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
     """
     spec = eplan.spec
     boundary = eplan.boundary
+    batch = eplan.batch
+    if eplan.fuse_strategy not in FUSE_STRATEGIES:
+        raise ValueError(f"plan carries unknown fuse strategy "
+                         f"{eplan.fuse_strategy!r}; choose from "
+                         f"{FUSE_STRATEGIES}")
     if eplan.sharding is not None:
         from repro.core.distributed import make_fused_distributed_stepper
         sh = eplan.sharding
@@ -920,9 +1016,21 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
             fused_option=eplan.option if eplan.fuse_depth > 1 else "auto",
             backend=eplan.backend, boundary=boundary, block=eplan.block,
             fuse_strategy=eplan.fuse_strategy,
+            batch=batch if batch > 1 else None,
             overlap=overlap, interpret=interpret)
-        return CompiledStencil(plan=eplan, fn=stepper.fn,
-                               global_fn=stepper.global_fn, stepper=stepper)
+
+        def _checked(inner):
+            # same clear shape errors the single-device fn raises, instead
+            # of an opaque shard_map/in_shardings rank mismatch
+            def f(x):
+                _check_plan_input(x, eplan.grid, spec.ndim, batch,
+                                  exact_rank=True)
+                return inner(x)
+            return f
+
+        return CompiledStencil(plan=eplan, fn=_checked(stepper.fn),
+                               global_fn=_checked(stepper.global_fn),
+                               stepper=stepper)
 
     eng = StencilEngine(spec, option=eplan.base_option, backend=eplan.backend,
                         block=eplan.block, boundary=boundary,
@@ -940,10 +1048,7 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
     nd = spec.ndim
 
     def fn(x: jnp.ndarray) -> jnp.ndarray:
-        if tuple(x.shape[x.ndim - nd:]) != grid:
-            raise ValueError(f"input spatial shape "
-                             f"{tuple(x.shape[x.ndim - nd:])} != planned "
-                             f"grid {grid}")
+        _check_plan_input(x, grid, nd, batch)
         for t in schedule:
             x = eng._apply_chunk(x, t, strategy)
         return x

@@ -32,14 +32,20 @@ from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
 __all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio",
            "inkernel_flops_ratio", "inkernel_traffic_ratio",
-           "fuse_schedule", "FUSE_STRATEGIES", "FuseCandidate",
-           "FuseDecision", "choose_fuse_depth"]
+           "fuse_schedule", "FUSE_STRATEGIES", "SCRATCH_MODES",
+           "check_scratch", "FuseCandidate", "FuseDecision",
+           "choose_fuse_depth"]
 
 #: The two executable temporal-blocking strategies: "operator" composes T
 #: steps into one stencil of radius T*r (this module's fuse_steps);
 #: "inkernel" runs T base-radius steps inside one kernel instance with
 #: VMEM-resident intermediates (kernels/stencil_mxu.sweep_pallas_call).
 FUSE_STRATEGIES = ("operator", "inkernel")
+
+# the canonical scratch-mode registry lives with the residency model it
+# parameterizes (matrixization.inkernel_vmem_bytes validates against it);
+# re-exported here next to the other temporal-blocking policy constants
+from repro.core.matrixization import SCRATCH_MODES, check_scratch  # noqa: E402
 
 
 def _correlate_full(a: np.ndarray, b: np.ndarray) -> np.ndarray:

@@ -4,6 +4,14 @@ Handles padding to block multiples, batch axes, differentiation (custom
 VJPs built from the adjoint stencil), and the interpret/compiled switch.
 On this CPU container kernels always run with ``interpret=True``; on TPU
 the same call sites compile to Mosaic.
+
+Batch axes (leading axes beyond ``spec.ndim``) are FOLDED into the kernel
+as a first-class batch dimension, not vmapped: the whole batch rides one
+``pallas_call`` whose per-axis Toeplitz contraction stays a single
+``dot_general`` (band operands built once, shared across the batch — the
+paper's §4.3 input-vector sharing applied across independent states).
+The output is bit-exact against ``jax.vmap`` of the single-state call,
+but amortizes one launch and one operand set over the batch.
 """
 from __future__ import annotations
 
@@ -37,45 +45,76 @@ def pallas_backend_core(plan, *, interpret: bool = True):
                              interpret=interpret)
 
 
-def pallas_sweep_core(plan, steps: int, *, interpret: bool = True):
+def pallas_sweep_core(plan, steps: int, *, interpret: bool = True,
+                      scratch: str = "pingpong"):
     """Valid-mode T-step core (the registry's ``sweep_builder`` contract).
 
     Advances ``steps`` applications of ``plan.spec`` per call via the
     in-kernel temporal-blocking kernel — shrinks each spatial axis by
     ``2 * steps * spec.order``, exactly like the ``steps``-fused operator's
     core, so the halo layer and the distributed deep-halo protocol drive it
-    unchanged.
+    unchanged.  ``scratch`` picks the VMEM intermediate policy
+    (``"pingpong"`` double buffer | ``"single"`` half the residency).
     """
     return functools.partial(stencil_sweep_matrixized, spec=plan.spec,
                              steps=steps, cover=plan.cover, block=plan.block,
-                             interpret=interpret)
+                             interpret=interpret, scratch=scratch)
 
 
-def _pad_to_multiple(x, block, w):
-    """Zero-pad the ``w``-haloed input so the valid output tiles evenly."""
-    pads = []
-    out_pad = []
-    for s, b in zip(x.shape, block):
+def _pad_to_multiple(x, block, w, ndim):
+    """Zero-pad the ``w``-haloed trailing ``ndim`` spatial axes so the
+    valid output tiles evenly (leading batch axes are never padded)."""
+    lead = x.ndim - ndim
+    pads = [(0, 0)] * lead
+    for s, b in zip(x.shape[lead:], block):
         out = s - 2 * w
-        extra = (-out) % b
-        pads.append((0, extra))
-        out_pad.append(extra)
+        pads.append((0, (-out) % b))
     if any(p[1] for p in pads):
         x = jnp.pad(x, pads)
-    return x, out_pad
+    return x
 
 
-def _default_block(spec: StencilSpec, out_sizes, halo_width: int):
+def _feasible_fold(batch: int, residency) -> int:
+    """Largest per-instance sub-batch whose VMEM residency fits the budget.
+
+    Folding replaced the old vmap path, which kept ONE state per kernel
+    instance — a pinned block that was feasible per state must stay
+    executable at any batch, so oversized batches are folded in the
+    largest feasible chunks instead of one instance (``residency(c)`` is
+    the modelled bytes of a c-state instance).  Never below 1: a single
+    state over budget is exactly as (in)feasible as it was pre-batching.
+    """
+    from repro.core.matrixization import VMEM_BUDGET
+    c = batch
+    while c > 1 and residency(c) > VMEM_BUDGET:
+        c -= 1
+    return c
+
+
+def _fold_call(xb, batch: int, chunk: int, call):
+    """Run ``call`` over ``xb`` in lead-axis chunks of ``chunk`` states."""
+    if chunk >= batch:
+        return call(xb, batch)
+    outs = [call(xb[i:i + chunk], min(chunk, batch - i))
+            for i in range(0, batch, chunk)]
+    return jnp.concatenate(outs, axis=0)
+
+
+def _default_block(spec: StencilSpec, out_sizes, halo_width: int,
+                   batch: int | None = None):
     """The planner's best-ranked MXU-aligned tile for this spatial shape.
 
     Routing the default through :func:`repro.core.planner.best_block`
     (instead of a hardcoded ``(128, 128)`` / ``(8, 8, 128)`` clamped with a
     raw ``min``) keeps ad-hoc kernel calls on lane/sublane-aligned tiles
-    whenever the grid allows one.  Deferred import: the planner imports the
-    engine, which builds its cores through this module.
+    whenever the grid allows one; ``batch`` scales the VMEM feasibility
+    bound (a batched instance holds every state's tile).  Deferred import:
+    the planner imports the engine, which builds its cores through this
+    module.
     """
     from repro.core.planner import best_block
-    return best_block(spec, tuple(out_sizes), halo_width=halo_width)
+    return best_block(spec, tuple(out_sizes), halo_width=halo_width,
+                      batch=batch or 1)
 
 
 def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
@@ -91,27 +130,40 @@ def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
     and preserve shape.
     """
     x = halo.pad_halo(x, spec.order, spec.ndim, boundary)
+    lead = x.shape[: x.ndim - spec.ndim]
     out_sizes = tuple(x.shape[x.ndim - spec.ndim + a] - 2 * spec.order
                       for a in range(spec.ndim))
     if cover is None:
         cover = cl.make_cover(spec, option)
+    batch = int(np.prod(lead)) if lead else None
     if block is None:
-        block = _default_block(spec, out_sizes, spec.order)
+        block = _default_block(spec, out_sizes, spec.order, batch)
     block = tuple(min(b, s) for b, s in zip(block, out_sizes))
-    plan = stencil_mxu.build_kernel_plan(spec, cover, block)
 
-    def single(xs):
-        xs_p, out_pad = _pad_to_multiple(xs, block, spec.order)
-        out = stencil_mxu.stencil_pallas_call(xs_p, plan, interpret=interpret)
-        index = tuple(slice(0, s) for s in
-                      (d - 2 * spec.order for d in xs.shape))
-        return out[index]
+    if not lead:
+        xs = _pad_to_multiple(x, block, spec.order, spec.ndim)
+        plan = stencil_mxu.build_kernel_plan(spec, cover, block)
+        out = stencil_mxu.stencil_pallas_call(xs, plan, interpret=interpret)
+        return out[tuple(slice(0, s) for s in out_sizes)]
+    if batch == 0:   # empty batch: the old vmap path returned empty too
+        return jnp.zeros(lead + out_sizes, x.dtype)
 
-    lead = x.ndim - spec.ndim
-    fn = single
-    for _ in range(lead):
-        fn = jax.vmap(fn)
-    return fn(x)
+    # fold the leading axes into the kernel batch dimension (band operands
+    # shared, per-axis dot count unchanged), chunked so a pinned block
+    # stays VMEM-feasible at any batch
+    from repro.core import matrixization as mx
+    xb = _pad_to_multiple(x.reshape((batch,) + x.shape[len(lead):]),
+                          block, spec.order, spec.ndim)
+
+    def call(xc, b):
+        plan = stencil_mxu.build_kernel_plan(spec, cover, block, batch=b)
+        return stencil_mxu.stencil_pallas_call(xc, plan, interpret=interpret)
+
+    chunk = _feasible_fold(batch, lambda c: mx.batched_vmem_bytes(
+        block, spec.order, x.dtype.itemsize, c))
+    out = _fold_call(xb, batch, chunk, call)
+    out = out[(slice(None),) + tuple(slice(0, s) for s in out_sizes)]
+    return out.reshape(lead + out_sizes)
 
 
 def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
@@ -120,20 +172,24 @@ def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
                              block: tuple[int, ...] | None = None,
                              option: str = "parallel",
                              boundary: str = "valid",
-                             interpret: bool = True) -> jnp.ndarray:
+                             interpret: bool = True,
+                             scratch: str = "pingpong") -> jnp.ndarray:
     """``steps`` stencil applications in ONE in-kernel temporally-blocked
-    pass (paper §6 x §4.3).  Batch axes lead.
+    pass (paper §6 x §4.3).  Batch axes lead (folded into the kernel's
+    batch dimension — one launch, shared per-step band operands).
 
     Boundary semantics mirror a ``steps``-fused operator: 'valid' shrinks
     the spatial extent by ``steps * spec.order`` per side; 'zero'/'periodic'
     pad the deep halo once and preserve shape ('zero' is the zero-EXTENDED
     evolution — the engine splices per-step-exact strips on top, exactly as
-    it does for operator fusion).
+    it does for operator fusion).  ``scratch`` picks the VMEM intermediate
+    policy ("pingpong" double buffer | "single" half the residency).
     """
     if steps < 1:
         raise ValueError("steps >= 1")
     w = steps * spec.order
     x = halo.pad_halo(x, w, spec.ndim, boundary)
+    lead = x.shape[: x.ndim - spec.ndim]
     out_sizes = tuple(x.shape[x.ndim - spec.ndim + a] - 2 * w
                       for a in range(spec.ndim))
     if any(s <= 0 for s in out_sizes):
@@ -141,22 +197,35 @@ def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
                          f"steps of order {spec.order}")
     if cover is None:
         cover = cl.make_cover(spec, option)
+    batch = int(np.prod(lead)) if lead else None
     if block is None:
-        block = _default_block(spec, out_sizes, w)
+        block = _default_block(spec, out_sizes, w, batch)
     block = tuple(min(b, s) for b, s in zip(block, out_sizes))
-    plan = stencil_mxu.build_sweep_kernel_plan(spec, cover, block, steps)
 
-    def single(xs):
-        xs_p, _ = _pad_to_multiple(xs, block, w)
-        out = stencil_mxu.sweep_pallas_call(xs_p, plan, interpret=interpret)
-        index = tuple(slice(0, d - 2 * w) for d in xs.shape)
-        return out[index]
+    if not lead:
+        xs = _pad_to_multiple(x, block, w, spec.ndim)
+        plan = stencil_mxu.build_sweep_kernel_plan(spec, cover, block, steps,
+                                                   scratch=scratch)
+        out = stencil_mxu.sweep_pallas_call(xs, plan, interpret=interpret)
+        return out[tuple(slice(0, s) for s in out_sizes)]
+    if batch == 0:   # empty batch: the old vmap path returned empty too
+        return jnp.zeros(lead + out_sizes, x.dtype)
 
-    lead = x.ndim - spec.ndim
-    fn = single
-    for _ in range(lead):
-        fn = jax.vmap(fn)
-    return fn(x)
+    from repro.core import matrixization as mx
+    xb = _pad_to_multiple(x.reshape((batch,) + x.shape[len(lead):]),
+                          block, w, spec.ndim)
+
+    def call(xc, b):
+        plan = stencil_mxu.build_sweep_kernel_plan(
+            spec, cover, block, steps, batch=b, scratch=scratch)
+        return stencil_mxu.sweep_pallas_call(xc, plan, interpret=interpret)
+
+    chunk = _feasible_fold(batch, lambda c: mx.inkernel_vmem_bytes(
+        block, steps, spec.order, x.dtype.itemsize, cover=cover, batch=c,
+        scratch=scratch))
+    out = _fold_call(xb, batch, chunk, call)
+    out = out[(slice(None),) + tuple(slice(0, s) for s in out_sizes)]
+    return out.reshape(lead + out_sizes)
 
 
 # ---------------------------------------------------------------------------

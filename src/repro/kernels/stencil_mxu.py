@@ -23,12 +23,28 @@ residency, all accumulator updates).
 In-kernel temporal blocking (paper §6 x §4.3): ``sweep_pallas_call`` runs T
 steps of the BASE operator inside one kernel instance.  The instance owns a
 ``T*r``-deep haloed slab; each step contracts the per-step Toeplitz set
-against the live slab and writes the result to a double-buffered VMEM
-scratch pair, shrinking the live halo by ``r`` per side per step, and only
-the final state is written to HBM.  Intermediates never touch HBM, so MXU
-work stays ``T x (2r+1)``-dense instead of the operator-fused
-``(2Tr+1)``-dense while the per-chunk traffic is the same single
-read+write.
+against the live slab and writes the result to a VMEM scratch buffer
+(``scratch="pingpong"`` keeps a double-buffered pair so reads never target
+the buffer being written even if Mosaic pipelines the steps;
+``scratch="single"`` exploits that each step's input is a fully
+materialized value before the write-back and halves the residency),
+shrinking the live halo by ``r`` per side per step, and only the final
+state is written to HBM.  Intermediates never touch HBM, so MXU work stays
+``T x (2r+1)``-dense instead of the operator-fused ``(2Tr+1)``-dense while
+the per-chunk traffic is the same single read+write.
+
+Batched execution (§4.3 input-vector sharing across states): both kernels
+accept a leading batch axis (``KernelPlan.batch`` / ``SweepKernelPlan
+.batch``).  One grid instance then owns the B-state slab for its tile and
+the per-axis contraction stays ONE ``dot_general`` — the banded Toeplitz
+operand is built once and shared, while the B states' grid lines stack
+into the SLAB operand's non-contracted matmul dimension (with the
+Toeplitz as LHS that is formally the RHS free dimension; the MXU's
+systolic array is symmetric in its two free dimensions and tiles each in
+128-wide passes, so "batch-in-M" is used as shorthand for filling those
+pass slots).  The per-axis dot count is therefore independent of B,
+which is exactly how batching fills the MXU slots that a single small
+grid leaves idle.
 """
 from __future__ import annotations
 
@@ -49,12 +65,23 @@ from repro.core.stencil_spec import StencilSpec
 from repro.kernels.pallas_compat import element_block_spec
 
 __all__ = ["KernelPlan", "build_kernel_plan", "stencil_pallas_call",
-           "SweepKernelPlan", "build_sweep_kernel_plan", "sweep_pallas_call"]
+           "SweepKernelPlan", "build_sweep_kernel_plan", "sweep_pallas_call",
+           "SCRATCH_MODES"]
+
+# the canonical scratch-mode registry lives with the other temporal-
+# blocking policy constants (one definition for engine, planner, kernels)
+from repro.core.temporal import SCRATCH_MODES, check_scratch  # noqa: E402
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelPlan:
-    """Host-side compilation of (spec, cover, block) into kernel constants."""
+    """Host-side compilation of (spec, cover, block) into kernel constants.
+
+    ``batch`` is None for a rank-``ndim`` spatial input; an int B makes the
+    kernel expect (and tile over) a leading batch axis of that extent —
+    the B states share every Toeplitz operand and each per-axis
+    contraction stays one ``dot_general``.
+    """
 
     spec: StencilSpec
     block: tuple[int, ...]
@@ -62,6 +89,7 @@ class KernelPlan:
     mat_lines: tuple[tuple[int, np.ndarray, tuple[tuple[int, int], ...]], ...]
     # degenerate taps: (coeff, gather offsets per axis)
     point_taps: tuple[tuple[float, tuple[int, ...]], ...]
+    batch: int | None = None
 
     @property
     def mxu_dots(self) -> int:
@@ -129,9 +157,12 @@ def _plan_lines(spec: StencilSpec, cover: LineCover):
 
 
 def build_kernel_plan(spec: StencilSpec, cover: LineCover,
-                      block: tuple[int, ...]) -> KernelPlan:
+                      block: tuple[int, ...],
+                      batch: int | None = None) -> KernelPlan:
     if len(block) != spec.ndim:
         raise ValueError(f"block rank {len(block)} != stencil ndim {spec.ndim}")
+    if batch is not None and batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     band_lines, point_taps = _plan_lines(spec, cover)
     # numpy path: this runs inside jit traces (plan-per-shape); a
     # jnp intermediate here would be a tracer (see toeplitz_band_np)
@@ -140,7 +171,8 @@ def build_kernel_plan(spec: StencilSpec, cover: LineCover,
          fixed)
         for axis, band, fixed in band_lines)
     return KernelPlan(spec=spec, block=tuple(block),
-                      mat_lines=mat_lines, point_taps=point_taps)
+                      mat_lines=mat_lines, point_taps=point_taps,
+                      batch=None if batch is None else int(batch))
 
 
 def _apply_step(slab, *, spec: StencilSpec, out_ext: tuple[int, ...],
@@ -149,32 +181,40 @@ def _apply_step(slab, *, spec: StencilSpec, out_ext: tuple[int, ...],
                 point_taps) -> jnp.ndarray:
     """One matrixized stencil application of a (VMEM-resident) slab value.
 
-    ``slab`` has extent ``out_ext[a] + 2r`` on every axis; the result has
-    extent ``out_ext``.  ``axis_ts[i]`` is the stacked Toeplitz for
+    ``slab`` has extent ``out_ext[a] + 2r`` on every spatial axis, with any
+    leading axes treated as batch; the result has extent ``out_ext`` behind
+    the same leading axes.  ``axis_ts[i]`` is the stacked Toeplitz for
     ``axis_meta[i] = (axis, per-line fixed offsets)`` — ONE ``dot_general``
-    per axis (§4.3); per-line terms are separated by static row slices and
-    trimmed to the output window on the non-contracted axes.
+    per axis regardless of the batch extent (§4.3 input-vector sharing:
+    the band operand is shared and the batch states' lines stack into the
+    contraction's non-contracted dimension); per-line terms are separated
+    by static row slices and trimmed to the output window on the
+    non-contracted axes.
     """
     nd, r = spec.ndim, spec.order
-    acc = jnp.zeros(out_ext, dtype=jnp.float32)
+    lead = slab.ndim - nd
+    out_ext = tuple(out_ext)
+    acc = jnp.zeros(slab.shape[:lead] + out_ext, dtype=jnp.float32)
     slab = slab.astype(jnp.float32)
     for t, (axis, fixeds) in zip(axis_ts, axis_meta):
         n_a = out_ext[axis]
         # ONE MXU contraction covers every line on this axis (Eq. 12 sums,
-        # batched): (L*n_a, n_a+2r) x slab -> (L*n_a, other slab extents).
+        # batched): (L*n_a, n_a+2r) x slab -> (L*n_a, batch, other extents).
         term = jax.lax.dot_general(
             t, slab,
-            dimension_numbers=(((1,), (axis,)), ((), ())),
+            dimension_numbers=(((1,), (lead + axis,)), ((), ())),
             preferred_element_type=jnp.float32)
         others = [a for a in range(nd) if a != axis]
         for l, fixed_d in enumerate(fixeds):
             index = [slice(l * n_a, (l + 1) * n_a)]
+            index += [slice(None)] * lead
             for a in others:
                 off = fixed_d.get(a, 0)
                 index.append(slice(off, off + out_ext[a]))
-            acc = acc + jnp.moveaxis(term[tuple(index)], 0, axis)
+            acc = acc + jnp.moveaxis(term[tuple(index)], 0, lead + axis)
     for c, gather in point_taps:
-        index = tuple(slice(g, g + n) for g, n in zip(gather, out_ext))
+        index = (slice(None),) * lead + tuple(
+            slice(g, g + n) for g, n in zip(gather, out_ext))
         acc = acc + jnp.float32(c) * slab[index].astype(jnp.float32)
     return acc
 
@@ -202,41 +242,59 @@ def _broadcast_spec(t: np.ndarray) -> pl.BlockSpec:
     return pl.BlockSpec(t.shape, lambda *ids, nd=t.ndim: (0,) * nd)
 
 
+def _check_batched_input(x, plan, nd, halo_width):
+    """Validate the (optionally batched) haloed input; returns (spatial
+    out shape, spatial grid)."""
+    lead = 0 if plan.batch is None else 1
+    if x.ndim != nd + lead:
+        kind = f"rank-{nd} spatial" if not lead else \
+            f"({plan.batch}, spatial...) batched"
+        raise ValueError(f"kernel expects {kind} input, got {x.shape}")
+    if lead and x.shape[0] != plan.batch:
+        raise ValueError(f"batch extent {x.shape[0]} != planned batch "
+                         f"{plan.batch}")
+    out_shape = tuple(s - 2 * halo_width for s in x.shape[lead:])
+    for s, b in zip(out_shape, plan.block):
+        if s % b:
+            raise ValueError(f"spatial size {s} not a multiple of block {b}")
+    return out_shape, tuple(s // b for s, b in zip(out_shape, plan.block))
+
+
 def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
                         interpret: bool = True) -> jnp.ndarray:
     """Run the matrixized stencil kernel over a haloed spatial array.
 
     ``x``: (S_0 + 2r, ..., S_{d-1} + 2r) haloed input; returns (S_0, ...,
     S_{d-1}) valid-mode output.  Spatial sizes must be multiples of the
-    block (the ops wrapper pads).
+    block (the ops wrapper pads).  When ``plan.batch`` is set, a leading
+    batch axis of that extent precedes the spatial axes on input and
+    output: the grid stays spatial (one instance owns every state's tile)
+    and the per-axis contraction count does not grow with the batch.
     """
     nd, r = plan.spec.ndim, plan.spec.order
     block = plan.block
-    if x.ndim != nd:
-        raise ValueError(f"kernel expects rank-{nd} spatial input, got {x.shape}")
-    out_shape = tuple(s - 2 * r for s in x.shape)
-    for s, b in zip(out_shape, block):
-        if s % b:
-            raise ValueError(f"spatial size {s} not a multiple of block {b}")
-    grid = tuple(s // b for s, b in zip(out_shape, block))
+    out_shape, grid = _check_batched_input(x, plan, nd, r)
+    lead = () if plan.batch is None else (plan.batch,)
 
     in_specs = [element_block_spec(
-        tuple(b + 2 * r for b in block),
-        lambda *ids: tuple(i * b for i, b in zip(ids, block)),
+        lead + tuple(b + 2 * r for b in block),
+        lambda *ids: (0,) * len(lead) + tuple(
+            i * b for i, b in zip(ids, block)),
     )]
     t_inputs = []
     for _axis, t, _fixeds in plan.axis_groups():
         t_inputs.append(jnp.asarray(t, jnp.float32))
         in_specs.append(_broadcast_spec(t))
 
-    out_spec = pl.BlockSpec(block, lambda *ids: ids)
+    out_spec = pl.BlockSpec(lead + block,
+                            lambda *ids: (0,) * len(lead) + tuple(ids))
     kernel = _make_kernel(plan, x.dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        out_shape=jax.ShapeDtypeStruct(lead + out_shape, x.dtype),
         interpret=interpret,
     )(x, *t_inputs)
 
@@ -256,7 +314,9 @@ class SweepKernelPlan:
     ``step_exts[-1] == block``.  ``band_lines``/``point_taps`` describe the
     BASE operator at band level — the same cover applies at every step,
     and each step's Toeplitz set is built from the bands at that step's
-    extent (``step_groups``).
+    extent (``step_groups``).  ``batch`` follows the :class:`KernelPlan`
+    convention (None = no leading axis); ``scratch`` picks the VMEM
+    intermediate policy (see :data:`SCRATCH_MODES`).
     """
 
     spec: StencilSpec
@@ -265,6 +325,8 @@ class SweepKernelPlan:
     # (axis, raw (2r+1,) gather band, fixed gather offsets) per multi-tap line
     band_lines: tuple[tuple[int, np.ndarray, tuple[tuple[int, int], ...]], ...]
     point_taps: tuple[tuple[float, tuple[int, ...]], ...]
+    batch: int | None = None
+    scratch: str = "pingpong"
 
     @property
     def step_exts(self) -> tuple[tuple[int, ...], ...]:
@@ -285,14 +347,19 @@ class SweepKernelPlan:
 
 def build_sweep_kernel_plan(spec: StencilSpec, cover: LineCover,
                             block: tuple[int, ...],
-                            steps: int) -> SweepKernelPlan:
+                            steps: int, batch: int | None = None,
+                            scratch: str = "pingpong") -> SweepKernelPlan:
     if len(block) != spec.ndim:
         raise ValueError(f"block rank {len(block)} != stencil ndim {spec.ndim}")
     if steps < 1:
         raise ValueError("steps >= 1")
+    if batch is not None and batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     band_lines, point_taps = _plan_lines(spec, cover)
     return SweepKernelPlan(spec=spec, block=tuple(block), steps=int(steps),
-                           band_lines=band_lines, point_taps=point_taps)
+                           band_lines=band_lines, point_taps=point_taps,
+                           batch=None if batch is None else int(batch),
+                           scratch=check_scratch(scratch))
 
 
 def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
@@ -306,11 +373,13 @@ def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
     groups_meta = [[(axis, fixeds) for axis, _t, fixeds in groups]
                    for groups in step_groups]
 
+    lead = 0 if plan.batch is None else 1
+
     def kernel(x_ref, *refs):
         n_t = sum(len(g) for g in step_groups)
         t_refs, o_ref = refs[:n_t], refs[n_t]
-        bufs = refs[n_t + 1:]          # double-buffered VMEM scratch pair
-        slab = x_ref[...]              # (block + 2*steps*r per axis)
+        bufs = refs[n_t + 1:]          # VMEM scratch (pair, or one "single")
+        slab = x_ref[...]              # ([batch,] block + 2*steps*r per axis)
         pos = 0
         for s in range(steps):
             n_groups = len(step_groups[s])
@@ -322,10 +391,12 @@ def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
             if s == steps - 1:
                 o_ref[...] = acc.astype(out_dtype)
             else:
-                # park the shrunk live slab in the ping-pong scratch buffer
-                # (never HBM) and read it back as the next step's input
-                buf = bufs[s % 2]
-                index = tuple(slice(0, n) for n in exts[s])
+                # park the shrunk live slab in scratch (never HBM) and read
+                # it back as the next step's input; "single" reuses one
+                # buffer — acc is a materialized value before the store
+                buf = bufs[s % len(bufs)]
+                index = (slice(None),) * lead + tuple(
+                    slice(0, n) for n in exts[s])
                 buf[index] = acc
                 slab = buf[index]
 
@@ -339,22 +410,21 @@ def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
     ``x``: (S_0 + 2*T*r, ..., S_{d-1} + 2*T*r) haloed input; returns
     (S_0, ..., S_{d-1}) — the state after T valid-mode applications.  One
     grid instance owns one output tile plus its ``T*r``-deep slab and runs
-    every step in VMEM; only the final state is written back.
+    every step in VMEM; only the final state is written back.  With
+    ``plan.batch`` set, a leading batch axis precedes the spatial axes
+    (the instance owns the B-state slab; scratch buffers batch alongside)
+    and the per-step, per-axis contraction count is independent of B.
     """
     nd, r = plan.spec.ndim, plan.spec.order
     block, steps = plan.block, plan.steps
     w = steps * r
-    if x.ndim != nd:
-        raise ValueError(f"kernel expects rank-{nd} spatial input, got {x.shape}")
-    out_shape = tuple(s - 2 * w for s in x.shape)
-    for s, b in zip(out_shape, block):
-        if s % b:
-            raise ValueError(f"spatial size {s} not a multiple of block {b}")
-    grid = tuple(s // b for s, b in zip(out_shape, block))
+    out_shape, grid = _check_batched_input(x, plan, nd, w)
+    lead = () if plan.batch is None else (plan.batch,)
 
     in_specs = [element_block_spec(
-        tuple(b + 2 * w for b in block),
-        lambda *ids: tuple(i * b for i, b in zip(ids, block)),
+        lead + tuple(b + 2 * w for b in block),
+        lambda *ids: (0,) * len(lead) + tuple(
+            i * b for i, b in zip(ids, block)),
     )]
     t_inputs = []
     step_groups = [plan.step_groups(s) for s in range(steps)]
@@ -363,19 +433,21 @@ def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
             t_inputs.append(jnp.asarray(t, jnp.float32))
             in_specs.append(_broadcast_spec(t))
 
-    # double-buffered slab scratch at the deepest intermediate extent
-    buf_ext = tuple(b + 2 * (steps - 1) * r for b in block)
-    scratch = [pltpu.VMEM(buf_ext, jnp.float32),
-               pltpu.VMEM(buf_ext, jnp.float32)]
+    # slab scratch at the deepest intermediate extent: a ping-pong pair by
+    # default, one buffer under scratch="single" (half the residency)
+    buf_ext = lead + tuple(b + 2 * (steps - 1) * r for b in block)
+    n_bufs = 1 if plan.scratch == "single" else 2
+    scratch = [pltpu.VMEM(buf_ext, jnp.float32) for _ in range(n_bufs)]
 
-    out_spec = pl.BlockSpec(block, lambda *ids: ids)
+    out_spec = pl.BlockSpec(lead + block,
+                            lambda *ids: (0,) * len(lead) + tuple(ids))
     kernel = _make_sweep_kernel(plan, x.dtype, step_groups)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        out_shape=jax.ShapeDtypeStruct(lead + out_shape, x.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
     )(x, *t_inputs)

@@ -16,6 +16,9 @@ enumerated candidate, best first — see ``ExecutionPlan.explain``):
 
     rank       selection order under the deterministic total order
     depth      fused-chunk length T (temporal fusion, paper §6)
+    batch      states advanced together per call (the problem's batch —
+               constant across one plan's rows; batched states fold into
+               the kernels' MXU contractions, see DESIGN.md §Batch)
     strat      temporal strategy: "operator" (one radius-T*r fused
                operator) | "inkernel" (T VMEM-resident base steps per
                Pallas kernel instance, flops linear in T)
@@ -27,10 +30,11 @@ enumerated candidate, best first — see ``ExecutionPlan.explain``):
     t_compute  calibrated MXU seconds per fused sweep over the grid
     t_traffic  calibrated HBM seconds per fused sweep
     t_comm     ICI seconds per fused chunk (deep halo exchange; 0 off-mesh)
-    t/model    UNcalibrated per-step score max(compute,traffic,comm)/T
-    t/step     calibrated per-step score — the quantity plan() minimizes
-               (equals t/model when no calibration is supplied, as in
-               the golden)
+    t/model    UNcalibrated per-STATE-per-step score
+               (max(compute,traffic,comm) + launch overhead) / (T * batch)
+    t/step     calibrated per-state-per-step score — the quantity plan()
+               minimizes (equals t/model when no calibration is supplied,
+               as in the golden)
 """
 from __future__ import annotations
 

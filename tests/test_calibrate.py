@@ -181,9 +181,13 @@ def test_calibrated_plan_never_outranks_a_strict_dominator():
         for b in raw:
             if a.key == b.key or a.backend != b.backend:
                 continue
+            # domination covers every per-step term, the (uncalibrated,
+            # constant-per-chunk) launch overhead included — i.e. a must
+            # not fuse shallower than b
             if (a.t_compute / a.depth <= b.t_compute / b.depth
                     and a.t_traffic / a.depth <= b.t_traffic / b.depth
-                    and a.t_comm / a.depth <= b.t_comm / b.depth):
+                    and a.t_comm / a.depth <= b.t_comm / b.depth
+                    and a.depth >= b.depth):
                 checked += 1
                 assert cal[a.key].t_per_step <= cal[b.key].t_per_step * (
                     1 + 1e-12), (a.key, b.key)

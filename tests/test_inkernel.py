@@ -92,6 +92,56 @@ def test_inkernel_sweep_bit_exact_full_suite(name, boundary, fuse):
     _check_inkernel(SUITE[name], boundary, steps=fuse + 1, fuse=fuse)
 
 
+def test_inkernel_single_scratch_bit_exact_both_modes():
+    """scratch="single"|"pingpong" are the same arithmetic (each step's
+    input is a materialized value before write-back), so both must be
+    bit-exact against the sequential per-step reference, the single-buffer
+    variant must halve the modelled scratch residency, and the engine's
+    core cache must never alias the two compiled variants."""
+    spec = SUITE["star2d_r2"]
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.normal(size=(40, 40)), jnp.float32)
+    outs = {}
+    for scratch in ("pingpong", "single"):
+        eng = StencilEngine(spec, backend="pallas", block=(16, 16),
+                            boundary="periodic", scratch=scratch)
+        outs[scratch] = eng.sweep(x, 4, fuse=2, strategy="inkernel")
+        seq = _evolve_ref(eng, x, 4, "periodic")
+        np.testing.assert_array_equal(np.asarray(outs[scratch]),
+                                      np.asarray(seq), err_msg=scratch)
+        # per-call override keys separately from the engine default
+        assert (2, scratch) in eng._inkernel_cores
+        eng.inkernel_core(2, "single")
+        assert (2, "single") in eng._inkernel_cores
+    np.testing.assert_array_equal(np.asarray(outs["pingpong"]),
+                                  np.asarray(outs["single"]))
+    # modelled residency: one buffer instead of two
+    from repro.core import matrixization as mx
+    pp = mx.inkernel_vmem_bytes((64, 128), 4, 2)
+    single = mx.inkernel_vmem_bytes((64, 128), 4, 2, scratch="single")
+    buf = 4 * float(np.prod([b + 2 * 3 * 2 for b in (64, 128)]))
+    assert pp - single == pytest.approx(buf)
+    with pytest.raises(ValueError):
+        StencilEngine(spec, backend="pallas", scratch="bogus")
+
+
+def test_unknown_chunk_strategy_raises_not_keyerror():
+    """A bogus strategy string (e.g. a hand-edited plan) must fail with a
+    clear ValueError at the chunk gate, not silently run operator fusion
+    or surface a downstream KeyError."""
+    import dataclasses
+    eng = StencilEngine(SUITE["box2d_r1"], backend="pallas", block=(16, 16),
+                        boundary="periodic")
+    with pytest.raises(ValueError, match="fuse strategy"):
+        eng._apply_chunk(jnp.ones((32, 32), jnp.float32), 2, "bogus")
+    prob = api.StencilProblem(SUITE["box2d_r1"], (32, 32),
+                              boundary="periodic", steps=4)
+    p = api.plan(prob, fuse=2, backends=["pallas"])
+    bad = dataclasses.replace(p, fuse_strategy="bogus")
+    with pytest.raises(ValueError, match="fuse strategy"):
+        api.compile(bad)
+
+
 def test_inkernel_equals_operator_fusion_values():
     """Both strategies advance the same evolution (allclose — the operator
     strategy rounds differently by construction)."""
@@ -292,7 +342,10 @@ def test_sweep_fn_inkernel_is_jit_safe():
     eng = StencilEngine(spec, backend="pallas", block=(8, 8),
                         boundary="periodic")
     fn = eng.sweep_fn(6, fuse=3, grid=(24, 24), strategy="inkernel")
-    assert 3 in eng._inkernel_cores, "inkernel core was not pre-built"
+    # the core cache keys (depth, scratch policy) — everything that
+    # changes the compiled core
+    assert (3, "pingpong") in eng._inkernel_cores, \
+        "inkernel core was not pre-built"
     f = jax.jit(fn)
     out = f(x)
     f(x), f(x)
