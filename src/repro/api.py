@@ -40,8 +40,9 @@ from repro.core.engine import (Backend, StencilEngine, backend_names,
 from repro.core.plan_cache import CachedExecutable, PlanCache, cache_key
 from repro.core.planner import (CandidateCost, CompiledStencil, ExecutionPlan,
                                 FUSE_STRATEGIES, PLAN_VERSION, StencilProblem,
-                                best_block, candidate_blocks, candidate_cost,
-                                compile_plan, plan)
+                                batch_cost_curve, best_block, candidate_blocks,
+                                candidate_cost, compile_plan,
+                                max_profitable_batch, plan, serving_buckets)
 from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
                                      from_gather_coeffs, star)
 from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
@@ -54,7 +55,8 @@ compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
 __all__ = [
     "StencilProblem", "ExecutionPlan", "CandidateCost", "CompiledStencil",
     "plan", "compile", "compile_plan", "candidate_cost", "candidate_blocks",
-    "best_block", "FUSE_STRATEGIES", "PLAN_VERSION",
+    "best_block", "batch_cost_curve", "max_profitable_batch",
+    "serving_buckets", "FUSE_STRATEGIES", "PLAN_VERSION",
     "CalibrationRecord", "CandidateMeasurement", "calibrate",
     "measure_candidate",
     "PlanCache", "CachedExecutable", "cache_key",

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Mapping
 
@@ -36,7 +37,7 @@ import jax
 
 from repro.core.planner import (CompiledStencil, ExecutionPlan, PLAN_VERSION,
                                 StencilProblem, _calibration_dict,
-                                compile_plan, plan)
+                                compile_plan, max_profitable_batch, plan)
 
 __all__ = ["PlanCache", "CachedExecutable", "cache_key"]
 
@@ -66,6 +67,9 @@ def _freeze(v: Any):
     return v
 
 
+# Last-resort field list for hardware objects that expose neither
+# dataclass fields nor a __dict__ (e.g. __slots__ shims); real specs are
+# introspected so a newly added roofline field changes the key by itself.
 _HW_FIELDS = ("name", "peak_flops_bf16", "hbm_bw", "ici_bw", "hbm_bytes",
               "launch_overhead_s")
 
@@ -73,10 +77,18 @@ _HW_FIELDS = ("name", "peak_flops_bf16", "hbm_bw", "ici_bw", "hbm_bytes",
 def _hw_key(hw) -> tuple | None:
     """Hardware identity by PARAMETERS, not just name: two specs sharing a
     name but differing in any roofline constant (e.g. a
-    ``launch_overhead_s`` override) must not alias executables."""
+    ``launch_overhead_s`` override) must not alias executables.  The
+    fields come from the object itself (dataclass fields, else
+    ``vars()``), so a hardware model that GROWS a roofline field is a new
+    identity without this module having to know the field's name."""
     if hw is None:
         return None
-    return tuple((f, getattr(hw, f, None)) for f in _HW_FIELDS)
+    if dataclasses.is_dataclass(hw) and not isinstance(hw, type):
+        fields = tuple(f.name for f in dataclasses.fields(hw))
+    else:
+        d = getattr(hw, "__dict__", None)
+        fields = tuple(sorted(d)) if d else _HW_FIELDS
+    return tuple((f, getattr(hw, f, None)) for f in fields)
 
 
 def cache_key(problem: StencilProblem, *, hw=None, calibration=None,
@@ -121,8 +133,20 @@ class CachedExecutable:
     re-traces.  ``hits`` counts how many cache lookups this entry served
     after the compiling miss; ``calls`` counts SUCCESSFUL executions
     (the serving loop uses it to separate each executable's first
-    trace+compile call from warm sweeps in its timing, so it is bumped
-    only after a call returns — a failed first call stays cold).
+    trace+compile call from warm sweeps in its timing).
+
+    Success accounting happens strictly AFTER device readiness: an async
+    server launches with :meth:`dispatch` (which books nothing) and calls
+    :meth:`mark_ready` once ``block_until_ready()`` returned without
+    raising — so a deferred device error on the first call leaves the
+    entry cold and the NEXT real first call's trace+compile time is still
+    booked as compile, not warm, wall clock.  ``__call__`` is the
+    synchronous convenience wrapping exactly that sequence.
+
+    Per-entry timing hooks: ``compile_s`` accumulates the first
+    successful call (trace + compile + sweep), ``wall_s`` every warm
+    successful call — per-executable analogues of the serving loop's
+    aggregate ``ServeStats`` counters.
     """
 
     key: tuple
@@ -131,10 +155,36 @@ class CachedExecutable:
     fn: Callable
     hits: int = 0
     calls: int = 0
+    compile_s: float = 0.0   # first successful call (trace+compile+sweep)
+    wall_s: float = 0.0      # warm successful calls
+
+    @property
+    def warm(self) -> bool:
+        """Whether this executable has at least one SUCCESSFUL call."""
+        return self.calls > 0
+
+    def dispatch(self, x):
+        """Launch without waiting or accounting (JAX async dispatch): the
+        caller owns readiness and must :meth:`mark_ready` on success."""
+        return self.fn(x)
+
+    def mark_ready(self, wall_s: float = 0.0) -> bool:
+        """Book one successful execution of ``wall_s`` seconds; returns
+        whether the entry was already warm BEFORE this call (i.e. whether
+        ``wall_s`` was booked as warm rather than compile time)."""
+        warm = self.calls > 0
+        if warm:
+            self.wall_s += wall_s
+        else:
+            self.compile_s += wall_s
+        self.calls += 1
+        return warm
 
     def __call__(self, x):
-        out = self.fn(x)
-        self.calls += 1
+        t0 = time.perf_counter()
+        out = self.dispatch(x)
+        out.block_until_ready()
+        self.mark_ready(time.perf_counter() - t0)
         return out
 
 
@@ -155,6 +205,9 @@ class PlanCache:
         self._hw = hw
         self._interpret = interpret
         self._entries: OrderedDict[tuple, CachedExecutable] = OrderedDict()
+        # plan-without-compile memo (admission-control queries): bounded
+        # separately — plans are small frozen records, executables are not
+        self._plans: OrderedDict[tuple, ExecutionPlan] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -164,6 +217,54 @@ class PlanCache:
 
     def __contains__(self, key: tuple) -> bool:
         return key in self._entries
+
+    @property
+    def hw(self):
+        """The hardware model every lookup plans against (None = default)."""
+        return self._hw
+
+    @property
+    def interpret(self) -> bool:
+        """Whether compiled executables run Pallas in interpret mode."""
+        return self._interpret
+
+    def plan_only(self, problem: StencilProblem, *, calibration=None,
+                  **plan_kwargs) -> ExecutionPlan:
+        """The frozen plan for ``problem`` WITHOUT compiling anything.
+
+        Memoized under the same :func:`cache_key` as :meth:`get` and
+        reused by it, so a model-only query (the admission-control
+        bucket-cliff walk) is never planning work thrown away: if the
+        server later compiles the same problem, the miss skips straight
+        to compile.  Does not touch the executable hit/miss counters.
+        """
+        key = cache_key(problem, hw=self._hw, calibration=calibration,
+                        **plan_kwargs)
+        entry = self._entries.get(key)
+        if entry is not None:
+            return entry.plan
+        p = self._plans.get(key)
+        if p is None:
+            p = plan(problem, self._hw, calibration=calibration,
+                     **plan_kwargs)
+            self._plans[key] = p
+            while len(self._plans) > 4 * self.maxsize:
+                self._plans.popitem(last=False)
+        else:
+            self._plans.move_to_end(key)
+        return p
+
+    def bucket_cap(self, problem: StencilProblem, max_batch: int, *,
+                   calibration=None, rtol: float = 0.0,
+                   **plan_kwargs) -> int:
+        """:func:`repro.core.planner.max_profitable_batch` through this
+        cache's plan memo: the largest serving bucket below the modelled
+        VMEM cliff for ``problem``'s shape group (its ``batch`` is
+        ignored), with every walked plan retained for later compiles."""
+        return max_profitable_batch(
+            problem, max_batch, self._hw, rtol=rtol,
+            plan_fn=lambda pb: self.plan_only(pb, calibration=calibration,
+                                              **plan_kwargs))
 
     def get(self, problem: StencilProblem, *, calibration=None,
             mesh=None, **plan_kwargs) -> CachedExecutable:
@@ -183,7 +284,12 @@ class PlanCache:
             entry.hits += 1
             return entry
         self.misses += 1
-        p = plan(problem, self._hw, calibration=calibration, **plan_kwargs)
+        # a prior plan_only() query (admission control) already planned
+        # this exact key: reuse its frozen record, compile only
+        p = self._plans.pop(key, None)
+        if p is None:
+            p = plan(problem, self._hw, calibration=calibration,
+                     **plan_kwargs)
         compiled = compile_plan(p, mesh=mesh, interpret=self._interpret)
         # distributed steppers are already jitted; jit single-device fns
         # here so a repeated request cannot re-trace either
@@ -198,7 +304,8 @@ class PlanCache:
     def stats(self) -> dict:
         return {"size": len(self._entries), "maxsize": self.maxsize,
                 "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+                "evictions": self.evictions, "plans": len(self._plans)}
 
     def clear(self) -> None:
         self._entries.clear()
+        self._plans.clear()

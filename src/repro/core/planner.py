@@ -79,7 +79,8 @@ from repro.core.stencil_spec import StencilSpec, from_gather_coeffs
 
 __all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
            "CompiledStencil", "plan", "compile_plan", "candidate_cost",
-           "candidate_blocks", "best_block", "factor_key",
+           "candidate_blocks", "best_block", "batch_cost_curve",
+           "max_profitable_batch", "serving_buckets", "factor_key",
            "FUSE_STRATEGIES", "PLAN_VERSION", "LAUNCH_OVERHEAD_S"]
 
 PLAN_VERSION = 4
@@ -933,6 +934,76 @@ def candidate_cost(problem: StencilProblem, depth: int, option: str,
                       base_flops, problem.dtype_bytes, hw,
                       _calibration_dict(calibration), strategy=strategy,
                       batch=problem.batch)
+
+
+# ---------------------------------------------------------------------------
+# Serving admission: the batch bucket-cliff query
+# ---------------------------------------------------------------------------
+
+def serving_buckets(max_batch: int) -> list[int]:
+    """The batch bucket sizes a serving loop compiles for a ``max_batch``
+    cap: powers of two plus the cap itself (matching the bucket round-up
+    in ``launch.serve_stencil``), ascending."""
+    if max_batch < 1:
+        raise ValueError("max_batch >= 1")
+    bs = [1]
+    while bs[-1] * 2 < max_batch:
+        bs.append(bs[-1] * 2)
+    if max_batch > 1:
+        bs.append(int(max_batch))
+    return bs
+
+
+def batch_cost_curve(problem: StencilProblem, max_batch: int, hw=None, *,
+                     plan_fn: Callable | None = None,
+                     **plan_kwargs) -> dict[int, float]:
+    """Modelled per-STATE cost of ``problem`` at every serving bucket.
+
+    Plans ``problem`` at each bucket of :func:`serving_buckets` (the
+    problem's own ``batch`` is ignored) and returns ``{bucket:
+    chosen t_per_step}`` — the curve batching bends: M-fill and launch
+    amortization push it down until the batch-scaled VMEM feasibility
+    bound prunes the fast blocks/strategies and it climbs back up (the
+    cliff; the 3-D stars in ``BENCH_serve.json`` are the canonical case).
+    Model-only: nothing is compiled.  ``plan_fn`` substitutes a custom
+    planner (e.g. :meth:`repro.core.plan_cache.PlanCache.plan_only`, so a
+    server's repeated queries reuse memoized plans); by default
+    :func:`plan` runs with ``hw`` and ``plan_kwargs``.
+    """
+    if plan_fn is None:
+        if hw is None:
+            hw = _default_hw()
+
+        def plan_fn(pb):
+            return plan(pb, hw, **plan_kwargs)
+
+    return {b: plan_fn(dataclasses.replace(problem, batch=b))
+              .chosen().t_per_step
+            for b in serving_buckets(max_batch)}
+
+
+def max_profitable_batch(problem: StencilProblem, max_batch: int, hw=None, *,
+                         rtol: float = 0.0,
+                         plan_fn: Callable | None = None,
+                         **plan_kwargs) -> int:
+    """Largest serving bucket at or below the modelled per-state cost
+    minimum — the admission-control cap for one shape group.
+
+    The serving loop would otherwise round a full group up to
+    ``max_batch`` and compile whatever the planner can still fit — past
+    the VMEM cliff that is a strictly SLOWER executable per state (the
+    batch-scaled residency bound prunes the fast blocks, or the inkernel
+    strategy falls back to operator).  This query walks the
+    :func:`batch_cost_curve` and returns the largest bucket whose cost is
+    within ``rtol`` of the curve's minimum, so a server caps the group's
+    bucket below the cliff instead of serving it.  Buckets larger than
+    the returned cap are modelled as per-state regressions; smaller ones
+    remain legal (a part-full group still rounds to the nearest bucket).
+    """
+    curve = batch_cost_curve(problem, max_batch, hw, plan_fn=plan_fn,
+                             **plan_kwargs)
+    best = min(curve.values())
+    return max(b for b, t in curve.items() if t <= best * (1.0 + rtol))
 
 
 # ---------------------------------------------------------------------------

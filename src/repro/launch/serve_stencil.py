@@ -1,8 +1,8 @@
-"""Stencil serving loop: bucketed batching over the plan/executable cache.
+"""Async continuous-batching stencil server over the plan/executable cache.
 
-The ROADMAP's serving story made concrete: a request stream of independent
+The ROADMAP's serving story made real: a request stream of independent
 user states (arbitrary arrival order, mixed grid shapes) is advanced
-``steps`` applications each, at per-state cost amortized three ways:
+``steps`` applications each, at per-state cost amortized four ways:
 
   1. **plan/compile amortization** — executables come from a
      :class:`repro.core.plan_cache.PlanCache`; a repeated (shape, dtype,
@@ -18,10 +18,30 @@ user states (arbitrary arrival order, mixed grid shapes) is advanced
   3. **launch amortization** — one kernel dispatch per chunk serves the
      whole bucket (the planner's ``LAUNCH_OVERHEAD_S / (depth * batch)``
      term, measured here as per-state wall clock).
+  4. **dispatch overlap** — the scheduler is ``step()``-driven
+     continuous batching: every turn admits whatever is pending RIGHT
+     NOW into freshly dispatched buckets (no waiting for a bucket to
+     fill) and only then settles the buckets dispatched on earlier
+     turns, so host-side stacking/padding of bucket N+1 overlaps device
+     execution of bucket N (JAX async dispatch + deferred
+     ``block_until_ready``).
 
 Buckets are powers of two so a variable-size stream maps onto a tiny,
 highly-reusable set of compiled batch shapes; the padding waste is
-bounded by 2x and reported.
+bounded by 2x and reported.  **Admission control** keeps the bucket
+round-up honest: per shape group the server asks the planner's
+bucket-cliff query (:func:`repro.core.planner.max_profitable_batch`,
+through the cache's plan memo) for the largest bucket the cost model
+still prices as a per-state win, and caps the group BELOW the
+batch-scaled VMEM cliff (the 3-D stars at B=8) instead of compiling a
+slower executable.
+
+Per-request latency (submit -> settled result) is tracked next to the
+throughput counters — p50/p95/mean in ``stats()["latency"]`` — and
+``submit(state, deadline_s=...)`` counts deadline misses.  A
+**multi-device** server (``devices=jax.devices()``) routes shape groups
+round-robin across devices, each with its own :class:`PlanCache`, and
+reports a per-device column.
 
     PYTHONPATH=src python -m repro.launch.serve_stencil --cell star2d_r2 \
         --requests 24 --steps 4 --max-batch 8
@@ -35,6 +55,7 @@ from typing import Sequence
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.plan_cache import PlanCache
@@ -52,16 +73,52 @@ def _bucket(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
+def _shape_str(shape: tuple[int, ...]) -> str:
+    return "x".join(str(n) for n in shape)
+
+
+@dataclasses.dataclass
+class _Request:
+    """One submitted state awaiting its bucket."""
+    ticket: int
+    state: jnp.ndarray
+    submit_t: float
+    deadline_s: float | None = None
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unsettled bucket (its device work may still be
+    running; ``out`` is the unrealized result)."""
+    shape: tuple[int, ...]
+    requests: list[_Request]
+    bucket: int
+    entry: object            # CachedExecutable
+    out: jnp.ndarray
+    t0: float                # dispatch time (perf_counter)
+    device: int              # index into the server's device list
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Aggregate serving counters (see :meth:`StencilServer.stats`).
 
     ``wall_s``/``warm_states`` cover only batches whose executable had
-    already run at least once, so ``per_state_s`` is the steady-state
-    sweep wall clock; each executable's FIRST call (jit trace + compile +
-    sweep) is accounted separately in ``compile_wall_s`` — otherwise the
-    launch-amortization metric would be compile-dominated until enough
-    warm traffic diluted it.
+    already completed at least once, so ``per_state_s`` is the
+    steady-state sweep wall clock; each executable's FIRST call (jit
+    trace + compile + sweep) is accounted separately in
+    ``compile_wall_s`` — otherwise the launch-amortization metric would
+    be compile-dominated until enough warm traffic diluted it.  Under
+    overlapped dispatch a bucket's wall clock spans dispatch -> settled,
+    which includes any time it queued behind earlier buckets on the
+    device: the per-bucket numbers are honest completion spans, the
+    end-to-end win of overlap shows up in whole-stream wall clock
+    (``benchmarks/bench_serve.py`` measures both).
+
+    ``latencies_s`` records every request's submit -> settled latency
+    (the queue + batching + device time a caller actually waits);
+    ``deadline_misses`` counts requests whose latency exceeded the
+    ``deadline_s`` they were submitted with.
     """
 
     requests: int = 0
@@ -70,6 +127,8 @@ class ServeStats:
     wall_s: float = 0.0          # warm-executable sweep seconds
     warm_states: int = 0         # states served by warm executables
     compile_wall_s: float = 0.0  # first-call (trace+compile+sweep) seconds
+    deadline_misses: int = 0
+    latencies_s: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
     def per_state_s(self) -> float:
@@ -81,28 +140,62 @@ class ServeStats:
         """Warm-served states per second of sweep wall-clock."""
         return self.warm_states / self.wall_s if self.wall_s else 0.0
 
+    def latency_percentile(self, q: float) -> float:
+        """Latency percentile in seconds (0.0 with no settled requests)."""
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(self.latencies_s, q))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p95_latency_s(self) -> float:
+        return self.latency_percentile(95)
+
 
 class StencilServer:
-    """Batch-bucketed request loop for one stencil operator.
+    """Continuous-batching request scheduler for one stencil operator.
 
     One server owns one operator + evolution contract (``spec``,
     ``steps``, ``boundary``, ``dtype``) and serves any stream of states
-    of any spatial shape matching ``spec.ndim``.  ``submit()`` enqueues a
-    state and returns a ticket; ``flush()`` executes every pending state
-    (grouped by shape, bucketed by batch) and returns ``{ticket:
-    result}``.  ``serve(states)`` is the submit-all-then-flush
-    convenience, preserving order.
+    of any spatial shape matching ``spec.ndim``:
+
+      * ``submit(state, deadline_s=...)`` enqueues a state, returns a
+        ticket;
+      * ``step()`` runs one scheduler turn — admit every pending request
+        into freshly dispatched buckets, then settle the buckets
+        dispatched on EARLIER turns (so dispatch of this turn's work
+        overlaps the device finishing the last turn's);
+      * ``results(ticket)`` claims one settled result; ``ready(ticket)``
+        peeks;
+      * ``flush()`` steps until nothing is pending or in flight and
+        returns every unclaimed ``{ticket: result}``;
+      * ``serve(states)`` is the submit-all-then-flush convenience,
+        preserving order (it claims only its own tickets — results
+        recovered for OTHER tickets stay claimable).
+
+    ``async_dispatch=False`` degrades to the synchronous PR-5 loop (each
+    bucket settles immediately after dispatch) — the reference the async
+    path is bit-exact against.  ``admission=False`` disables the
+    bucket-cliff cap.  ``devices`` (e.g. ``jax.devices()``) shards the
+    server: shape groups route round-robin, one ``PlanCache`` per
+    device.
 
     The plan/executable cache is injectable so several servers (or a
     server plus ad-hoc callers) can share one; by default each server
-    owns a fresh :class:`PlanCache`.
+    owns a fresh :class:`PlanCache` (per device).
     """
 
     def __init__(self, spec: StencilSpec, steps: int, *,
                  boundary: str = "periodic", dtype: str = "float32",
                  max_batch: int = 8, cache: PlanCache | None = None,
                  backends: Sequence[str] | None = None,
-                 interpret: bool = True, hw=None):
+                 interpret: bool = True, hw=None,
+                 async_dispatch: bool = True,
+                 admission: bool = True, admission_rtol: float = 0.0,
+                 devices: Sequence | None = None):
         if steps < 0:
             raise ValueError("steps >= 0")
         if max_batch < 1:
@@ -113,16 +206,42 @@ class StencilServer:
         self.dtype = dtype
         self.max_batch = int(max_batch)
         self.backends = None if backends is None else list(backends)
-        self.cache = cache if cache is not None else PlanCache(
+        self.async_dispatch = bool(async_dispatch)
+        self.admission = bool(admission)
+        self.admission_rtol = float(admission_rtol)
+        if devices is not None and not list(devices):
+            raise ValueError("devices must be non-empty when given")
+        self._devices = list(devices) if devices is not None else [None]
+        base = cache if cache is not None else PlanCache(
             hw=hw, interpret=interpret)
-        self._pending: list[tuple[int, jnp.ndarray]] = []
+        #: one PlanCache per device — jit executables are per-device, so
+        #: sharing one entry across devices would mix their warm/compile
+        #: accounting and recompile under a single ``calls`` counter
+        self.caches: list[PlanCache] = [base] + [
+            PlanCache(maxsize=base.maxsize, hw=base.hw,
+                      interpret=base.interpret)
+            for _ in self._devices[1:]]
+        self.cache = self.caches[0]
+        self._pending: list[_Request] = []
+        self._inflight: list[_InFlight] = []
         self._done: dict[int, jnp.ndarray] = {}
         self._next_ticket = 0
+        self._caps: dict[tuple[int, ...], int] = {}
+        self._group_dev: dict[tuple[int, ...], int] = {}
+        self._device_stats = [
+            {"device": str(d) if d is not None else "default",
+             "batches": 0, "states": 0, "shapes": []}
+            for d in self._devices]
         self.stats_ = ServeStats()
 
     # -- request intake ----------------------------------------------------
-    def submit(self, state) -> int:
-        """Enqueue one state; returns the ticket flush() keys results by."""
+    def submit(self, state, *, deadline_s: float | None = None) -> int:
+        """Enqueue one state; returns the ticket results are keyed by.
+
+        ``deadline_s`` is a per-request latency budget in seconds from
+        now; a request settling later still returns its result but
+        increments ``stats()["deadline_misses"]``.
+        """
         state = jnp.asarray(state, jnp.dtype(self.dtype))
         if state.ndim != self.spec.ndim:
             raise ValueError(f"state rank {state.ndim} != spec ndim "
@@ -130,14 +249,39 @@ class StencilServer:
                              f"time; the server does the batching)")
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, state))
+        self._pending.append(_Request(ticket, state, time.perf_counter(),
+                                      deadline_s))
         return ticket
 
     def cancel(self, ticket: int) -> bool:
         """Drop a pending request (e.g. one a failed flush() named)."""
         n = len(self._pending)
-        self._pending = [p for p in self._pending if p[0] != ticket]
+        self._pending = [r for r in self._pending if r.ticket != ticket]
         return len(self._pending) < n
+
+    def pending_tickets(self) -> list[int]:
+        """Tickets still waiting for a bucket, in submission order."""
+        return [r.ticket for r in self._pending]
+
+    # -- results -----------------------------------------------------------
+    def ready(self, ticket: int) -> bool:
+        """Whether ``results(ticket)`` would return without stepping."""
+        return ticket in self._done
+
+    def results(self, ticket: int) -> jnp.ndarray:
+        """Claim one settled result (removing it from the server).
+
+        Unclaimed results are retained across any number of ``flush()`` /
+        ``serve()`` calls — a recovered bucket's tickets are never lost —
+        until this accessor (or a ``flush()`` return) hands them out.
+        """
+        try:
+            return self._done.pop(ticket)
+        except KeyError:
+            raise KeyError(
+                f"ticket {ticket} has no claimable result (unknown, still "
+                f"pending or in flight, or already claimed); run step() or "
+                f"flush() to settle pending work") from None
 
     # -- execution ---------------------------------------------------------
     def _problem(self, shape: tuple[int, ...], batch: int) -> StencilProblem:
@@ -145,86 +289,258 @@ class StencilServer:
                               boundary=self.boundary, steps=self.steps,
                               batch=batch)
 
-    def _run_bucket(self, shape, group):
-        """Advance one <= max_batch group as a single padded-batch call."""
-        b = _bucket(len(group), self.max_batch)
-        states = [s for _, s in group]
-        states += [jnp.zeros(shape, jnp.dtype(self.dtype))] * (b - len(group))
-        batch_arr = jnp.stack(states)
-        kwargs = {} if self.backends is None else {"backends": self.backends}
-        entry = self.cache.get(self._problem(shape, b), **kwargs)
-        warm = entry.calls > 0
-        t0 = time.perf_counter()
-        # entry(...) — not entry.fn — so the calls counter has exactly ONE
-        # increment site, and it moves only after a successful dispatch: a
-        # failed first call must not mark the executable warm (the next
-        # real first call would book its compile time into the warm stats)
-        out = entry(batch_arr[0])[None] if b == 1 else entry(batch_arr)
-        out.block_until_ready()
-        dt = time.perf_counter() - t0
-        if warm:
-            self.stats_.wall_s += dt
-            self.stats_.warm_states += len(group)
-        else:
-            self.stats_.compile_wall_s += dt
-        self.stats_.batches += 1
-        self.stats_.padded_states += b - len(group)
-        self.stats_.requests += len(group)
-        return {ticket: out[i] for i, (ticket, _) in enumerate(group)}
+    def _plan_kwargs(self) -> dict:
+        return {} if self.backends is None else {"backends": self.backends}
 
-    def flush(self) -> dict[int, jnp.ndarray]:
-        """Execute every pending request; returns {ticket: evolved state}.
+    def _device_of(self, shape: tuple[int, ...]) -> int:
+        """Round-robin shape-group -> device assignment (sticky, so a
+        group's buckets always hit the same cache + jit executables)."""
+        di = self._group_dev.get(shape)
+        if di is None:
+            di = len(self._group_dev) % len(self._devices)
+            self._group_dev[shape] = di
+            self._device_stats[di]["shapes"].append(_shape_str(shape))
+        return di
 
-        Lossless bucket-by-bucket progress: a request leaves the queue
-        the moment its bucket SUCCEEDS, and its result is retained.  If a
-        bucket fails (e.g. a state too small for the planned evolution),
-        the error names the offending shape/tickets; the failed bucket's
-        requests stay queued (cancel or resubmit them), already-completed
-        buckets are neither recomputed nor double-counted, and their
-        results are returned by the next successful ``flush()``.
+    def bucket_cap(self, shape: tuple[int, ...]) -> int:
+        """Admission-control bucket cap for one shape group, memoized.
+
+        With ``admission`` on, the planner's bucket-cliff query walks the
+        modelled per-state cost over the serving buckets (through the
+        device's plan memo, so the walk's plans are reused by the later
+        compiling miss) and the group is capped at the largest bucket
+        still priced as a win — below the batch-scaled VMEM cliff.
         """
-        by_shape: dict[tuple[int, ...], list] = {}
-        for ticket, state in self._pending:
-            by_shape.setdefault(tuple(state.shape), []).append((ticket, state))
+        cap = self._caps.get(shape)
+        if cap is None:
+            if self.admission and self.max_batch > 1:
+                di = self._device_of(shape)
+                cap = self.caches[di].bucket_cap(
+                    self._problem(shape, 1), self.max_batch,
+                    rtol=self.admission_rtol, **self._plan_kwargs())
+            else:
+                cap = self.max_batch
+            self._caps[shape] = cap
+        return cap
+
+    def _dispatch_bucket(self, shape: tuple[int, ...], cap: int,
+                         chunk: list[_Request]) -> _InFlight:
+        """Stack/pad one <= cap group on the host and launch it (async)."""
+        b = _bucket(len(chunk), cap)
+        states = [r.state for r in chunk]
+        states += [jnp.zeros(shape, jnp.dtype(self.dtype))] * (b - len(chunk))
+        batch_arr = jnp.stack(states)
+        di = self._device_of(shape)
+        dev = self._devices[di]
+        if dev is not None:
+            batch_arr = jax.device_put(batch_arr, dev)
+        entry = self.caches[di].get(self._problem(shape, b),
+                                    **self._plan_kwargs())
+        t0 = time.perf_counter()
+        # dispatch only — readiness (and the entry's success accounting)
+        # is deferred to _settle, so a failed first call stays cold and
+        # host-side prep of the next bucket overlaps this device work
+        out = entry.dispatch(batch_arr[0] if b == 1 else batch_arr)
+        return _InFlight(shape=shape, requests=list(chunk), bucket=b,
+                         entry=entry, out=out, t0=t0, device=di)
+
+    def _salvage(self) -> None:
+        """Settle whatever is in flight before propagating a primary
+        error; a secondary settle failure already requeued its requests,
+        so it is deliberately swallowed here."""
+        try:
+            self._settle(list(self._inflight))
+        except Exception:
+            pass
+
+    def _admit(self) -> None:
+        """Admit every pending request into dispatched buckets NOW.
+
+        Continuous batching: buckets form from whatever has been
+        submitted by this turn (grouped by shape, capped by admission
+        control) — a late submit rides the next turn's buckets instead
+        of waiting for this group to fill.  A request leaves the queue
+        the moment its bucket dispatches; a bucket that fails to build
+        or dispatch leaves its requests queued, settles everything
+        already in flight, and raises naming the shape and tickets.
+        """
+        if not self._pending:
+            return
+        by_shape: dict[tuple[int, ...], list[_Request]] = {}
+        for r in self._pending:
+            by_shape.setdefault(tuple(r.state.shape), []).append(r)
         for shape in sorted(by_shape):
             group = by_shape[shape]
-            for i in range(0, len(group), self.max_batch):
-                chunk = group[i:i + self.max_batch]
+            try:
+                cap = self.bucket_cap(shape)
+            except Exception as e:
+                self._salvage()
+                raise ValueError(
+                    f"serving bucket of shape {shape} failed for tickets "
+                    f"{[r.ticket for r in group]}: {e}; the failed requests "
+                    f"stay queued and completed results are returned by the "
+                    f"next flush()") from e
+            for i in range(0, len(group), cap):
+                chunk = group[i:i + cap]
                 try:
-                    done = self._run_bucket(shape, chunk)
+                    fb = self._dispatch_bucket(shape, cap, chunk)
                 except Exception as e:
+                    self._salvage()
                     raise ValueError(
                         f"serving bucket of shape {shape} failed for "
-                        f"tickets {[t for t, _ in chunk]}: {e}; the failed "
-                        f"requests stay queued and completed results are "
-                        f"returned by the next flush()") from e
-                self._done.update(done)
-                ids = {t for t, _ in chunk}
-                self._pending = [p for p in self._pending
-                                 if p[0] not in ids]
+                        f"tickets {[r.ticket for r in chunk]}: {e}; the "
+                        f"failed requests stay queued and completed results "
+                        f"are returned by the next flush()") from e
+                ids = {r.ticket for r in chunk}
+                self._pending = [r for r in self._pending
+                                 if r.ticket not in ids]
+                self._inflight.append(fb)
+                if not self.async_dispatch:
+                    self._settle([fb])
+
+    def _settle(self, buckets: list[_InFlight]) -> int:
+        """Block on the given in-flight buckets, book stats + latencies,
+        move results to ``_done``.  A bucket whose deferred device work
+        failed requeues its requests (its executable stays COLD — the
+        success accounting sits after readiness) and the first failure is
+        re-raised after the rest settled."""
+        settled = 0
+        failure: tuple[_InFlight, Exception] | None = None
+        for fb in buckets:
+            if fb not in self._inflight:
+                continue  # already settled by an earlier salvage pass
+            self._inflight.remove(fb)
+            try:
+                fb.out.block_until_ready()
+            except Exception as e:
+                self._pending.extend(fb.requests)
+                if failure is None:
+                    failure = (fb, e)
+                continue
+            now = time.perf_counter()
+            dt = now - fb.t0
+            warm = fb.entry.mark_ready(dt)
+            st = self.stats_
+            if warm:
+                st.wall_s += dt
+                st.warm_states += len(fb.requests)
+            else:
+                st.compile_wall_s += dt
+            st.batches += 1
+            st.padded_states += fb.bucket - len(fb.requests)
+            st.requests += len(fb.requests)
+            ds = self._device_stats[fb.device]
+            ds["batches"] += 1
+            ds["states"] += len(fb.requests)
+            for i, r in enumerate(fb.requests):
+                self._done[r.ticket] = fb.out if fb.bucket == 1 else fb.out[i]
+                lat = now - r.submit_t
+                st.latencies_s.append(lat)
+                if r.deadline_s is not None and lat > r.deadline_s:
+                    st.deadline_misses += 1
+            settled += len(fb.requests)
+        if failure is not None:
+            fb, e = failure
+            raise ValueError(
+                f"serving bucket of shape {fb.shape} failed for tickets "
+                f"{[r.ticket for r in fb.requests]}: {e}; the failed "
+                f"requests stay queued and completed results are returned "
+                f"by the next flush()") from e
+        return settled
+
+    def step(self) -> int:
+        """One scheduler turn; returns how many requests settled.
+
+        Admits every pending request into freshly dispatched buckets,
+        then settles the buckets dispatched on EARLIER turns — the
+        double-buffering discipline: while the device works on last
+        turn's buckets, this turn's stacking/padding/dispatch happens on
+        the host, and only then does the host block.
+        """
+        before = self.stats_.requests
+        prior = list(self._inflight)
+        self._admit()
+        if self.async_dispatch:
+            self._settle(prior)
+        return self.stats_.requests - before
+
+    def flush(self) -> dict[int, jnp.ndarray]:
+        """Step until nothing is pending or in flight; return every
+        unclaimed ``{ticket: evolved state}`` (the claim).
+
+        Lossless bucket-by-bucket progress: a request leaves the queue
+        the moment its bucket DISPATCHES, and its result is retained
+        once settled.  If a bucket fails, the error names the offending
+        shape/tickets; the failed bucket's requests stay queued (cancel
+        or resubmit them), already-completed buckets are neither
+        recomputed nor double-counted, and their results are returned by
+        the next successful ``flush()`` — or individually by
+        :meth:`results`, which is how ``serve()`` claims, so one
+        caller's flush can never strand another's tickets.
+        """
+        while self._pending or self._inflight:
+            self.step()
         results, self._done = self._done, {}
         return results
 
     def serve(self, states: Sequence) -> list[jnp.ndarray]:
-        """Submit every state, flush, return results in submission order."""
+        """Submit every state, flush, return results in submission order.
+
+        Claims ONLY its own tickets: results the flush recovered for
+        tickets submitted elsewhere go back to the server, still
+        claimable via :meth:`results` or the next ``flush()``.
+        """
         tickets = [self.submit(s) for s in states]
         results = self.flush()
-        return [results[t] for t in tickets]
+        out = [results.pop(t) for t in tickets]
+        self._done.update(results)
+        return out
 
     __call__ = serve
 
     # -- reporting ---------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the serving counters (cache counters are left alone) —
+        e.g. between a warm-up pass and a measured pass."""
+        self.stats_ = ServeStats()
+
     def stats(self) -> dict:
-        """Serving counters merged with the underlying plan-cache stats."""
-        s = dataclasses.asdict(self.stats_)
-        s["per_state_s"] = self.stats_.per_state_s
-        s["throughput_states_per_s"] = self.stats_.throughput
-        s["plan_cache"] = self.cache.stats()
+        """Serving counters + latency percentiles + admission caps +
+        per-device columns, merged with the plan-cache stats (summed
+        across devices; each device row carries its own)."""
+        st = self.stats_
+        s = dataclasses.asdict(st)
+        lat = s.pop("latencies_s")
+        s["per_state_s"] = st.per_state_s
+        s["throughput_states_per_s"] = st.throughput
+        s["latency"] = {
+            "count": len(lat),
+            "p50_s": st.p50_latency_s,
+            "p95_s": st.p95_latency_s,
+            "mean_s": float(np.mean(lat)) if lat else 0.0,
+            "max_s": float(np.max(lat)) if lat else 0.0,
+        }
+        s["admission"] = {_shape_str(shape): cap
+                          for shape, cap in sorted(self._caps.items())}
+        per_dev = []
+        for ds, cache in zip(self._device_stats, self.caches):
+            row = dict(ds)
+            row["plan_cache"] = cache.stats()
+            per_dev.append(row)
+        s["devices"] = per_dev
+        if len(self.caches) == 1:
+            s["plan_cache"] = self.cache.stats()
+        else:
+            merged: dict[str, int] = {}
+            for cache in self.caches:
+                for k, v in cache.stats().items():
+                    merged[k] = merged.get(k, 0) + v
+            s["plan_cache"] = merged
         return s
 
 
 # ---------------------------------------------------------------------------
-# CLI: synthesize a mixed request stream and report throughput
+# CLI: synthesize a mixed request stream and report throughput + latency
 # ---------------------------------------------------------------------------
 
 def main() -> None:
@@ -240,12 +556,23 @@ def main() -> None:
     ap.add_argument("--boundary", default="periodic")
     ap.add_argument("--backends", default="jnp",
                     help="comma-separated backend pin ('' = full search)")
+    ap.add_argument("--sync", action="store_true",
+                    help="synchronous dispatch (settle each bucket "
+                         "immediately) instead of overlapped")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable the bucket-cliff admission cap")
+    ap.add_argument("--all-devices", action="store_true",
+                    help="route shape groups round-robin over jax.devices()")
     args = ap.parse_args()
 
     spec = PAPER_SUITE()[args.cell]
     backends = [b for b in args.backends.split(",") if b] or None
     server = StencilServer(spec, args.steps, boundary=args.boundary,
-                           max_batch=args.max_batch, backends=backends)
+                           max_batch=args.max_batch, backends=backends,
+                           async_dispatch=not args.sync,
+                           admission=not args.no_admission,
+                           devices=jax.devices() if args.all_devices
+                           else None)
     rng = np.random.default_rng(0)
     shapes = [(args.grid,) * spec.ndim,
               (max(2 * args.grid // 3, 8),) * spec.ndim]
@@ -260,17 +587,27 @@ def main() -> None:
     warm = time.perf_counter() - t0
 
     s = server.stats()
+    mode = "sync" if args.sync else "async"
     print(f"served {s['requests']} states of {args.cell} x {args.steps} "
-          f"steps in {s['batches']} batches "
-          f"({s['padded_states']} padded slots)")
+          f"steps in {s['batches']} batches ({mode} dispatch, "
+          f"{s['padded_states']} padded slots)")
     print(f"cold pass {cold * 1e3:.1f} ms (plans + compiles: "
           f"{s['compile_wall_s'] * 1e3:.1f} ms first calls), warm pass "
           f"{warm * 1e3:.1f} ms -> "
           f"{args.requests / warm:.1f} states/s warm")
     print(f"warm sweep wall per state {s['per_state_s'] * 1e6:.0f} us; "
+          f"latency p50 {s['latency']['p50_s'] * 1e3:.1f} ms / "
+          f"p95 {s['latency']['p95_s'] * 1e3:.1f} ms; "
           f"plan cache: {s['plan_cache']['hits']} hits / "
           f"{s['plan_cache']['misses']} misses "
           f"(size {s['plan_cache']['size']})")
+    caps = ", ".join(f"{k}<={v}" for k, v in s["admission"].items())
+    print(f"admission caps: {caps or '-'}")
+    if len(s["devices"]) > 1:
+        print("device        batches  states  shapes")
+        for row in s["devices"]:
+            print(f"{row['device']:<13s} {row['batches']:7d} "
+                  f"{row['states']:7d}  {','.join(row['shapes']) or '-'}")
 
 
 if __name__ == "__main__":

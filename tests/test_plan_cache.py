@@ -54,6 +54,91 @@ def test_cache_key_separates_everything_that_changes_the_executable():
         cache_key(_problem(), hw=TPU_V5E)
 
 
+def test_hw_key_fields_come_from_the_object_itself():
+    """Satellite fix: the hardware key is derived from the hardware
+    OBJECT (dataclass fields / __dict__), not a hardcoded field list —
+    a model that grows a new roofline field is a new identity, and a
+    non-dataclass shim keys by its own attributes."""
+    import dataclasses
+    from repro.launch.mesh import TPU_V5E
+
+    @dataclasses.dataclass(frozen=True)
+    class ExtendedHW(type(TPU_V5E)):
+        mxu_util_derate: float = 1.0
+
+    base_kw = dataclasses.asdict(TPU_V5E)
+    full = ExtendedHW(**base_kw, mxu_util_derate=1.0)
+    derated = ExtendedHW(**base_kw, mxu_util_derate=0.5)
+    # two specs differing ONLY in the field this module never heard of
+    assert cache_key(_problem(), hw=full) != cache_key(_problem(), hw=derated)
+    assert cache_key(_problem(), hw=full) == cache_key(_problem(), hw=full)
+
+    class DuckHW:
+        def __init__(self, extra):
+            self.name = "duck"
+            self.peak_flops_bf16 = 1e12
+            self.hbm_bw = 1e9
+            self.extra = extra
+
+    assert cache_key(_problem(), hw=DuckHW(1)) != \
+        cache_key(_problem(), hw=DuckHW(2))
+    assert cache_key(_problem(), hw=DuckHW(1)) == \
+        cache_key(_problem(), hw=DuckHW(1))
+
+
+def test_entry_accounting_sits_after_readiness():
+    """Per-entry timing hooks: the first SUCCESSFUL call books compile_s,
+    warm calls book wall_s, and dispatch() alone books nothing — so a
+    deferred device failure between dispatch and readiness leaves the
+    executable cold (test_serve_async exercises the server-level path)."""
+    cache = PlanCache()
+    entry = cache.get(_problem(steps=1), backends=["jnp"])
+    assert entry.calls == 0 and not entry.warm
+    x = jnp.ones((32, 32), jnp.float32)
+    entry(x)
+    assert entry.calls == 1 and entry.warm
+    assert entry.compile_s > 0 and entry.wall_s == 0.0
+    entry(x)
+    assert entry.calls == 2 and entry.wall_s > 0
+    # dispatch() books nothing until the caller confirms readiness
+    wall_before = entry.wall_s
+    out = entry.dispatch(x)
+    assert entry.calls == 2 and entry.wall_s == wall_before
+    out.block_until_ready()
+    assert entry.mark_ready(0.25) is True   # was already warm
+    assert entry.calls == 3 and entry.wall_s >= wall_before + 0.25
+
+
+def test_plan_only_memo_is_reused_by_get(monkeypatch):
+    """A model-only query (the admission bucket-cliff walk) plans each
+    bucket exactly once, and a later compiling get() of the same key
+    reuses the memoized plan instead of re-planning."""
+    cache = PlanCache()
+    plans = []
+    real_plan = pc_mod.plan
+    monkeypatch.setattr(pc_mod, "plan",
+                        lambda *a, **k: plans.append(1) or real_plan(*a, **k))
+    p2 = cache.plan_only(_problem(batch=2), backends=["jnp"])
+    assert len(plans) == 1
+    assert cache.plan_only(_problem(batch=2), backends=["jnp"]) is p2
+    assert len(plans) == 1
+    assert cache.stats()["plans"] == 1
+    entry = cache.get(_problem(batch=2), backends=["jnp"])
+    assert entry.plan is p2 and len(plans) == 1, \
+        "compiling miss re-planned a memoized key"
+    assert cache.misses == 1 and cache.hits == 0
+    assert cache.stats()["plans"] == 0    # promoted out of the memo
+    # the cap walk is fully memoized on repeat
+    cap = cache.bucket_cap(_problem(), 4, backends=["jnp"])
+    assert 1 <= cap <= 4
+    n = len(plans)
+    assert cache.bucket_cap(_problem(), 4, backends=["jnp"]) == cap
+    assert len(plans) == n
+    # plan_only on an already-compiled entry reads the entry, no memo
+    assert cache.plan_only(_problem(batch=2), backends=["jnp"]) is p2
+    assert len(plans) == n
+
+
 def test_second_identical_request_hits_no_replan_no_retrace(monkeypatch):
     cache = PlanCache()
     plans = []
@@ -183,7 +268,7 @@ def test_flush_failure_loses_no_requests_and_no_results():
     with pytest.raises(ValueError, match=str(bad)):
         server.flush()
     # good bucket completed and left the queue; only the bad ticket waits
-    assert [t for t, _ in server._pending] == [bad]
+    assert server.pending_tickets() == [bad]
     batches_after_fail = server.stats_.batches
     assert server.cancel(bad) and not server.cancel(bad)
     results = server.flush()
