@@ -20,14 +20,16 @@ bench-temporal:
 
 # machine-readable perf trajectory: regenerates BENCH_plan.json (modelled
 # planner decision per PAPER_SUITE cell + calibrated factors),
-# BENCH_temporal.json (fused-sweep wall-clock vs model) and
+# BENCH_temporal.json (fused-sweep wall-clock vs model),
 # BENCH_serve.json (batched per-state cost vs B + serving-loop
-# throughput) — run once per PR so the repo records how the cost model
+# throughput) and BENCH_rollout.json (fused segment programs vs
+# step-by-step) — run once per PR so the repo records how the cost model
 # and decisions drift over time.
 bench-smoke:
 	$(PY) benchmarks/bench_plan.py --json
 	$(PY) benchmarks/bench_temporal.py --json
 	$(PY) benchmarks/bench_serve.py --json
+	$(PY) benchmarks/bench_rollout.py --json
 
 # planner decision record for the PAPER_SUITE on TPU_V5E; the tier-1 golden
 # test (tests/test_plan_golden.py) diffs this output against

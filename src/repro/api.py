@@ -31,6 +31,19 @@ variable-size request stream onto both (DESIGN.md §Batch):
 
     server = api.StencilServer(api.box(2, 1), steps=8, max_batch=8)
     evolved = server.serve(list_of_states)
+
+Rollout programs (README §Rollout, DESIGN.md §Rollout): interleave fused
+sweeps with registered pointwise update operators (forcing terms,
+observation-style nudging, user callables) as one planned, cached,
+checkpointable executable:
+
+    program = api.RolloutProgram(problem, [
+        api.Segment(8, api.UpdateOp("source", {"scale": 0.1}), emit=True),
+        api.Segment(8, api.UpdateOp("nudge", {"gain": 0.2})),
+        api.Segment(16)])
+    rplan = api.plan_program(program)     # per-segment fuse decisions
+    result = api.compile_program(rplan).run(x)   # final + emitted states
+    api.run_checkpointed(...)             # restartable, bit-exact resume
 """
 from __future__ import annotations
 
@@ -48,6 +61,10 @@ from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
 from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
                                     calibrate, measure_candidate)
 from repro.launch.serve_stencil import ServeStats, StencilServer
+from repro.rollout import (CompiledRollout, RolloutPlan, RolloutProgram,
+                           RolloutResult, Segment, UpdateOp, compile_program,
+                           plan_program, register_update_op, run_checkpointed,
+                           update_op_names)
 
 compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
 #                         inside this namespace only, by design)
@@ -61,6 +78,9 @@ __all__ = [
     "measure_candidate",
     "PlanCache", "CachedExecutable", "cache_key",
     "StencilServer", "ServeStats",
+    "RolloutProgram", "Segment", "UpdateOp", "RolloutPlan", "RolloutResult",
+    "CompiledRollout", "plan_program", "compile_program", "run_checkpointed",
+    "register_update_op", "update_op_names",
     "StencilEngine", "Backend", "register_backend", "get_backend",
     "backend_names", "choose_cover", "legal_covers", "default_block",
     "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs",

@@ -135,11 +135,26 @@ def restore_checkpoint(directory: str, step: int, target_tree: Any,
 
 
 class CheckpointManager:
-    """Async checkpointing with retention and a wait/flush barrier."""
+    """Async checkpointing with retention and a wait/flush barrier.
 
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    Retention: ``keep_last=N`` keeps the N newest completed ``step_*``
+    directories and garbage-collects the rest after every successful
+    save; ``keep=None`` retains everything.  (``keep`` is the historical
+    alias for the same knob; ``keep_last`` wins when both are given, and
+    ``keep_last=None`` just defers to ``keep``.)  GC only ever sees
+    COMPLETED checkpoints — an in-flight
+    ``step_*.tmp`` directory matches neither the retention scan nor
+    ``latest_step``, so a crash mid-write can neither be restored from
+    nor disturb what is kept.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True,
+                 keep_last: Optional[int] = None):
         self.directory = directory
-        self.keep = keep
+        self.keep = keep if keep_last is None else keep_last
+        if self.keep is not None and self.keep < 1:
+            raise ValueError("keep_last >= 1 (or None to retain all)")
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -176,6 +191,8 @@ class CheckpointManager:
             raise RuntimeError("async checkpoint failed") from err
 
     def _gc(self):
+        if self.keep is None:
+            return
         steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
                        if (m := re.fullmatch(r"step_(\d+)", d)))
         for s in steps[: -self.keep]:

@@ -91,16 +91,34 @@ def _hw_key(hw) -> tuple | None:
     return tuple((f, getattr(hw, f, None)) for f in fields)
 
 
+def _program_key(program) -> tuple | None:
+    """Rollout-program identity slot of :func:`cache_key`.
+
+    Accepts a :class:`repro.rollout.program.RolloutProgram` (duck-typed
+    by its ``identity()``) or a pre-extracted identity tuple; ``None``
+    (a plain sweep) stays ``None`` — so a rollout program and a plain
+    sweep over the same :class:`StencilProblem` can NEVER collide, and
+    two programs differing in any segment length, update-op content id
+    or emit point key separately.
+    """
+    if program is None:
+        return None
+    ident = program.identity() if hasattr(program, "identity") else program
+    return _freeze(ident)
+
+
 def cache_key(problem: StencilProblem, *, hw=None, calibration=None,
-              **plan_kwargs) -> tuple:
+              program=None, **plan_kwargs) -> tuple:
     """Executable identity of a problem + planning context.
 
     Everything that changes what ``compile(plan(problem, ...))`` builds is
     keyed: the operator (by coefficient digest), grid, dtype, boundary,
     steps, batch, mesh decomposition, the hardware model (by its roofline
     parameters, not just its name), the calibration record (by content
-    digest — a re-measured record is a new executable) and every planner
-    pin (``fuse=``, ``backends=``, ``block=``, ``fuse_strategy=``, ...).
+    digest — a re-measured record is a new executable), the rollout
+    program identity (``program=`` — segment lengths, update-op ids and
+    emit points; ``None`` for plain sweeps) and every planner pin
+    (``fuse=``, ``backends=``, ``block=``, ``fuse_strategy=``, ...).
     PLAN_VERSION leads the tuple so a cache can never serve a
     stale-format plan across an upgrade.
     """
@@ -118,6 +136,7 @@ def cache_key(problem: StencilProblem, *, hw=None, calibration=None,
         int(problem.steps),
         int(problem.batch),
         sharding,
+        _program_key(program),
         _hw_key(hw),
         _calibration_digest(calibration),
         _freeze(plan_kwargs),
@@ -183,7 +202,8 @@ class CachedExecutable:
     def __call__(self, x):
         t0 = time.perf_counter()
         out = self.dispatch(x)
-        out.block_until_ready()
+        # pytree-safe: rollout-program entries return (final, emits)
+        jax.block_until_ready(out)
         self.mark_ready(time.perf_counter() - t0)
         return out
 
@@ -295,6 +315,53 @@ class PlanCache:
         # here so a repeated request cannot re-trace either
         fn = compiled.fn if p.sharding is not None else jax.jit(compiled.fn)
         entry = CachedExecutable(key=key, plan=p, compiled=compiled, fn=fn)
+        self._entries[key] = entry
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def get_program(self, program, *, calibration=None,
+                    **plan_kwargs) -> CachedExecutable:
+        """The compiled executable for a whole rollout program, memoized
+        as ONE entry.
+
+        ``program`` is a :class:`repro.rollout.program.RolloutProgram`;
+        the entry's ``fn(x)`` runs every segment and returns
+        ``(final state, tuple of emitted states)`` — a pytree, which
+        :meth:`CachedExecutable.__call__`/servers must block on with
+        ``jax.block_until_ready``.  Keyed by the problem (at the
+        program's total step count) PLUS the program identity
+        (:func:`_program_key`), so it can never alias a plain sweep;
+        per-segment planning routes through :meth:`plan_only`'s memo, so
+        programs sharing segment shapes share cost tables.  The entry's
+        ``plan`` is the :class:`repro.rollout.planning.RolloutPlan`.
+        """
+        from repro.rollout.executor import compile_program
+        from repro.rollout.planning import plan_program
+        key = cache_key(dataclasses.replace(program.problem,
+                                            steps=program.total_steps),
+                        hw=self._hw, calibration=calibration,
+                        program=program, **plan_kwargs)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            entry.hits += 1
+            return entry
+        self.misses += 1
+        rplan = plan_program(program, self._hw, cache=self,
+                             calibration=calibration, **plan_kwargs)
+        compiled = compile_program(rplan, interpret=self._interpret)
+
+        def fn(x):
+            # per-segment sweeps/updates are already jitted inside
+            # compile_program; the program loop is host-side control flow
+            res = compiled.run(x)
+            return res.final, tuple(a for _, a in res.emits)
+
+        entry = CachedExecutable(key=key, plan=rplan, compiled=compiled,
+                                 fn=fn)
         self._entries[key] = entry
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)

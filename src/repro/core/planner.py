@@ -83,7 +83,7 @@ __all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
            "max_profitable_batch", "serving_buckets", "factor_key",
            "FUSE_STRATEGIES", "PLAN_VERSION", "LAUNCH_OVERHEAD_S"]
 
-PLAN_VERSION = 4
+PLAN_VERSION = 5
 
 FUSE_STRATEGIES = temporal.FUSE_STRATEGIES
 

@@ -36,6 +36,14 @@ still prices as a per-state win, and caps the group BELOW the
 batch-scaled VMEM cliff (the 3-D stars at B=8) instead of compiling a
 slower executable.
 
+**Rollout serving** (README §Rollout): ``submit_rollout(state,
+segments)`` enqueues a whole sweep+update program; the scheduler drives
+it one segment per turn through the same buckets — requests whose next
+hop shares a (shape, segment-identity) signature batch into ONE cached
+one-segment program executable (``PlanCache.get_program``), emitted
+intermediates stream incrementally via ``rollout_results(ticket)``, and
+the final state settles like any plain result.
+
 Per-request latency (submit -> settled result) is tracked next to the
 throughput counters — p50/p95/mean in ``stats()["latency"]`` — and
 ``submit(state, deadline_s=...)`` counts deadline misses.  A
@@ -61,6 +69,7 @@ import jax.numpy as jnp
 from repro.core.plan_cache import PlanCache
 from repro.core.planner import StencilProblem
 from repro.core.stencil_spec import PAPER_SUITE, StencilSpec
+from repro.rollout.program import RolloutProgram, Segment, as_segments
 
 __all__ = ["StencilServer", "ServeStats"]
 
@@ -78,12 +87,39 @@ def _shape_str(shape: tuple[int, ...]) -> str:
 
 
 @dataclasses.dataclass
+class _RolloutTask:
+    """Scheduler-side progress of one submitted rollout: which segment
+    runs next, how many steps completed, and the emitted intermediates
+    not yet drained by ``rollout_results``."""
+    segments: tuple[Segment, ...]
+    seg: int = 0
+    done_steps: int = 0
+    emits: list = dataclasses.field(default_factory=list)
+
+    @property
+    def current(self) -> Segment:
+        return self.segments[self.seg]
+
+    @property
+    def done(self) -> bool:
+        return self.seg >= len(self.segments)
+
+    def signature(self) -> tuple:
+        """Bucket-grouping identity of the NEXT segment: requests whose
+        next hop is the same (steps, update id, emit) share an
+        executable regardless of what the rest of their programs do."""
+        s = self.current
+        return (s.steps, s.update.update_id if s.update else "", s.emit)
+
+
+@dataclasses.dataclass
 class _Request:
     """One submitted state awaiting its bucket."""
     ticket: int
     state: jnp.ndarray
     submit_t: float
     deadline_s: float | None = None
+    rollout: _RolloutTask | None = None
 
 
 @dataclasses.dataclass
@@ -94,9 +130,10 @@ class _InFlight:
     requests: list[_Request]
     bucket: int
     entry: object            # CachedExecutable
-    out: jnp.ndarray
+    out: jnp.ndarray         # (final, emits) pytree for rollout buckets
     t0: float                # dispatch time (perf_counter)
     device: int              # index into the server's device list
+    segment: Segment | None = None   # the rollout hop this bucket ran
 
 
 @dataclasses.dataclass
@@ -224,6 +261,7 @@ class StencilServer:
         self.cache = self.caches[0]
         self._pending: list[_Request] = []
         self._inflight: list[_InFlight] = []
+        self._rollouts: dict[int, _RolloutTask] = {}
         self._done: dict[int, jnp.ndarray] = {}
         self._next_ticket = 0
         self._caps: dict[tuple[int, ...], int] = {}
@@ -252,6 +290,68 @@ class StencilServer:
         self._pending.append(_Request(ticket, state, time.perf_counter(),
                                       deadline_s))
         return ticket
+
+    def submit_rollout(self, state, segments, *,
+                       deadline_s: float | None = None) -> int:
+        """Enqueue one state for a ROLLOUT program; returns its ticket.
+
+        ``segments`` is anything :func:`repro.rollout.program.as_segments`
+        accepts (``Segment`` objects, bare step counts, ``(steps, update,
+        emit)`` tuples).  The scheduler drives the program one segment
+        per turn through the SAME bucket machinery as plain requests:
+        each ``step()`` advances every in-flight rollout by its next
+        segment, batching requests whose next hop shares a (shape,
+        segment-identity) signature into one cached program executable —
+        so B users at the same point of the same program ride one fused
+        sweep.  Emitted intermediates accumulate per ticket and are
+        drained incrementally with :meth:`rollout_results`; the FINAL
+        state is claimed like any result (:meth:`results` / ``flush()``),
+        and latency/deadline accounting spans submit -> final settle.
+        """
+        state = jnp.asarray(state, jnp.dtype(self.dtype))
+        if state.ndim != self.spec.ndim:
+            raise ValueError(f"state rank {state.ndim} != spec ndim "
+                             f"{self.spec.ndim} (submit one state at a "
+                             f"time; the server does the batching)")
+        segs = as_segments(segments)
+        if not segs:
+            raise ValueError("a rollout needs >= 1 segment")
+        if self.boundary == "valid":
+            raise ValueError("rollout serving needs a shape-preserving "
+                             "boundary (valid-mode grids shrink per "
+                             "segment, breaking bucket shape grouping)")
+        task = _RolloutTask(segments=segs)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._rollouts[ticket] = task
+        self._pending.append(_Request(ticket, state, time.perf_counter(),
+                                      deadline_s, rollout=task))
+        return ticket
+
+    def rollout_results(self, ticket: int) -> list[tuple[int, jnp.ndarray]]:
+        """Drain the emitted intermediates of one rollout so far.
+
+        Returns ``[(cumulative step, state), ...]`` for every emit point
+        settled since the last drain (possibly empty — stream more with
+        ``step()``).  The ticket stays drainable until the rollout is
+        done AND its stream is empty; the final state is claimed
+        separately via :meth:`results`.
+        """
+        task = self._rollouts.get(ticket)
+        if task is None:
+            raise KeyError(f"ticket {ticket} is not a known rollout "
+                           f"(plain submit, never submitted, or already "
+                           f"fully drained)")
+        out, task.emits = list(task.emits), []
+        if task.done and not task.emits:
+            del self._rollouts[ticket]
+        return out
+
+    def rollout_done(self, ticket: int) -> bool:
+        """Whether a rollout finished its last segment (final result may
+        still be unclaimed)."""
+        task = self._rollouts.get(ticket)
+        return task is None or task.done
 
     def cancel(self, ticket: int) -> bool:
         """Drop a pending request (e.g. one a failed flush() named)."""
@@ -284,9 +384,11 @@ class StencilServer:
                 f"flush() to settle pending work") from None
 
     # -- execution ---------------------------------------------------------
-    def _problem(self, shape: tuple[int, ...], batch: int) -> StencilProblem:
+    def _problem(self, shape: tuple[int, ...], batch: int,
+                 steps: int | None = None) -> StencilProblem:
         return StencilProblem(self.spec, shape, dtype=self.dtype,
-                              boundary=self.boundary, steps=self.steps,
+                              boundary=self.boundary,
+                              steps=self.steps if steps is None else steps,
                               batch=batch)
 
     def _plan_kwargs(self) -> dict:
@@ -325,7 +427,15 @@ class StencilServer:
 
     def _dispatch_bucket(self, shape: tuple[int, ...], cap: int,
                          chunk: list[_Request]) -> _InFlight:
-        """Stack/pad one <= cap group on the host and launch it (async)."""
+        """Stack/pad one <= cap group on the host and launch it (async).
+
+        Plain requests run the server's ``steps``-sweep executable; a
+        rollout group (all members share the next-segment signature, by
+        ``_admit``'s grouping) runs a ONE-segment program executable from
+        ``PlanCache.get_program`` — keyed by the segment identity, so it
+        can never alias the plain sweep, and shared by every rollout
+        whose next hop matches.
+        """
         b = _bucket(len(chunk), cap)
         states = [r.state for r in chunk]
         states += [jnp.zeros(shape, jnp.dtype(self.dtype))] * (b - len(chunk))
@@ -334,15 +444,23 @@ class StencilServer:
         dev = self._devices[di]
         if dev is not None:
             batch_arr = jax.device_put(batch_arr, dev)
-        entry = self.caches[di].get(self._problem(shape, b),
-                                    **self._plan_kwargs())
+        seg = chunk[0].rollout.current if chunk[0].rollout else None
+        if seg is not None:
+            program = RolloutProgram(
+                self._problem(shape, b, steps=seg.steps), (seg,))
+            entry = self.caches[di].get_program(program,
+                                               **self._plan_kwargs())
+        else:
+            entry = self.caches[di].get(self._problem(shape, b),
+                                        **self._plan_kwargs())
         t0 = time.perf_counter()
         # dispatch only — readiness (and the entry's success accounting)
         # is deferred to _settle, so a failed first call stays cold and
         # host-side prep of the next bucket overlaps this device work
         out = entry.dispatch(batch_arr[0] if b == 1 else batch_arr)
         return _InFlight(shape=shape, requests=list(chunk), bucket=b,
-                         entry=entry, out=out, t0=t0, device=di)
+                         entry=entry, out=out, t0=t0, device=di,
+                         segment=seg)
 
     def _salvage(self) -> None:
         """Settle whatever is in flight before propagating a primary
@@ -366,11 +484,16 @@ class StencilServer:
         """
         if not self._pending:
             return
-        by_shape: dict[tuple[int, ...], list[_Request]] = {}
+        # group by (shape, next-hop signature): plain requests carry the
+        # empty signature, a rollout the identity of its NEXT segment —
+        # so plain sweeps never share a bucket with rollout hops, and
+        # rollouts batch exactly when their next executables coincide
+        by_shape: dict[tuple, list[_Request]] = {}
         for r in self._pending:
-            by_shape.setdefault(tuple(r.state.shape), []).append(r)
-        for shape in sorted(by_shape):
-            group = by_shape[shape]
+            sig = r.rollout.signature() if r.rollout else ()
+            by_shape.setdefault((tuple(r.state.shape), sig), []).append(r)
+        for shape, _sig in sorted(by_shape):
+            group = by_shape[(shape, _sig)]
             try:
                 cap = self.bucket_cap(shape)
             except Exception as e:
@@ -411,7 +534,7 @@ class StencilServer:
                 continue  # already settled by an earlier salvage pass
             self._inflight.remove(fb)
             try:
-                fb.out.block_until_ready()
+                jax.block_until_ready(fb.out)
             except Exception as e:
                 self._pending.extend(fb.requests)
                 if failure is None:
@@ -428,17 +551,34 @@ class StencilServer:
                 st.compile_wall_s += dt
             st.batches += 1
             st.padded_states += fb.bucket - len(fb.requests)
-            st.requests += len(fb.requests)
             ds = self._device_stats[fb.device]
             ds["batches"] += 1
             ds["states"] += len(fb.requests)
+            # a rollout bucket's out is the program pytree (final, emits);
+            # the one-segment program's emit (if any) IS the final state
+            final = fb.out[0] if fb.segment is not None else fb.out
             for i, r in enumerate(fb.requests):
-                self._done[r.ticket] = fb.out if fb.bucket == 1 else fb.out[i]
+                res = final if fb.bucket == 1 else final[i]
+                if r.rollout is not None:
+                    task = r.rollout
+                    task.seg += 1
+                    task.done_steps += fb.segment.steps
+                    if fb.segment.emit:
+                        # one-segment program: at most one emit, == res
+                        task.emits.append((task.done_steps, res))
+                    if not task.done:
+                        # requeue for the next segment, preserving the
+                        # submit clock (latency spans the whole program)
+                        self._pending.append(
+                            dataclasses.replace(r, state=res))
+                        continue
+                self._done[r.ticket] = res
+                st.requests += 1
                 lat = now - r.submit_t
                 st.latencies_s.append(lat)
                 if r.deadline_s is not None and lat > r.deadline_s:
                     st.deadline_misses += 1
-            settled += len(fb.requests)
+                settled += 1
         if failure is not None:
             fb, e = failure
             raise ValueError(

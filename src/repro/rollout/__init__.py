@@ -1,0 +1,41 @@
+"""Rollout programs: interleaved fused sweeps + per-step update operators.
+
+The serving stack answers "advance B states T steps"; the workloads
+stencils exist for (assimilation, forced fluids, imaging pipelines)
+interleave stencil prediction with pointwise state updates and must
+survive running for hours.  This package makes the plan a *program*:
+
+  * :mod:`repro.rollout.program` — the :class:`RolloutProgram` spec
+    (:class:`~repro.core.planner.StencilProblem` + ordered
+    :class:`Segment` list, each ``sweep(T_i)`` then an optional
+    registered :class:`UpdateOp`, plus emit points) and the update-op
+    registry (:func:`register_update_op`).
+  * :mod:`repro.rollout.planning` — :func:`plan_program` chooses fuse
+    strategy/depth PER SEGMENT under the shared cost model and freezes
+    the decisions into a :class:`RolloutPlan` (JSON artifact with an
+    ``explain()`` table like single-sweep plans).
+  * :mod:`repro.rollout.executor` — :func:`compile_program` builds the
+    segment-wise executable (:class:`CompiledRollout`, streaming
+    intermediate states without breaking fused traffic inside a
+    segment) and :func:`run_checkpointed` drives it with
+    segment-boundary checkpoints, heartbeat/hard-timeout guards and
+    bounded-backoff restarts (bit-exact resume).
+
+See DESIGN.md §Rollout and README §Rollout for the runnable tour.
+"""
+from repro.rollout.program import (RolloutProgram, Segment, UpdateOp,
+                                   as_segments, build_update,
+                                   get_update_builder, register_update_op,
+                                   update_op_names)
+from repro.rollout.planning import RolloutPlan, plan_program
+from repro.rollout.executor import (CompiledRollout, RolloutResult,
+                                    compile_program, run_checkpointed)
+
+__all__ = [
+    "RolloutProgram", "Segment", "UpdateOp", "as_segments",
+    "register_update_op", "update_op_names", "get_update_builder",
+    "build_update",
+    "RolloutPlan", "plan_program",
+    "CompiledRollout", "RolloutResult", "compile_program",
+    "run_checkpointed",
+]

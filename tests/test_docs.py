@@ -20,4 +20,4 @@ def test_readme_marked_blocks_execute():
     assert "OK" in proc.stdout
     # the README currently carries 6 executable blocks; keep this in sync
     # so silently-skipped markers cannot pass
-    assert "6 block(s) executed" in proc.stdout, proc.stdout
+    assert "7 block(s) executed" in proc.stdout, proc.stdout

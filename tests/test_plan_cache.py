@@ -54,6 +54,39 @@ def test_cache_key_separates_everything_that_changes_the_executable():
         cache_key(_problem(), hw=TPU_V5E)
 
 
+def test_cache_key_separates_rollout_program_identity():
+    """Satellite: program identity (segment lengths, update-op ids, emit
+    points) participates in the key — a rollout program and a plain
+    sweep with the same total step count can never collide, and neither
+    can two programs differing only in a split point, an update
+    parameter, or an emit flag."""
+    from repro.rollout.program import RolloutProgram, Segment, UpdateOp
+
+    def key(segments=None):
+        prog = (RolloutProgram(_problem(steps=1), segments)
+                if segments is not None else None)
+        total = sum(s.steps for s in segments) if segments else 5
+        return cache_key(_problem(steps=total), program=prog)
+
+    base = key([Segment(2, UpdateOp("source", {"scale": 0.1})), Segment(3)])
+    assert key([Segment(2, UpdateOp("source", {"scale": 0.1})),
+                Segment(3)]) == base                     # deterministic
+    assert key() != base                                 # plain sweep
+    assert key([Segment(3, UpdateOp("source", {"scale": 0.1})),
+                Segment(2)]) != base                     # split point
+    assert key([Segment(2, UpdateOp("source", {"scale": 0.2})),
+                Segment(3)]) != base                     # update param
+    assert key([Segment(2, UpdateOp("nudge", {"gain": 0.1})),
+                Segment(3)]) != base                     # update op
+    assert key([Segment(2, UpdateOp("source", {"scale": 0.1})),
+                Segment(3, emit=True)]) != base          # emit point
+    # the pre-extracted identity tuple keys the same as the program
+    prog = RolloutProgram(_problem(steps=1),
+                          [Segment(2, UpdateOp("source", {"scale": 0.1})),
+                           Segment(3)])
+    assert cache_key(_problem(steps=5), program=prog.identity()) == base
+
+
 def test_hw_key_fields_come_from_the_object_itself():
     """Satellite fix: the hardware key is derived from the hardware
     OBJECT (dataclass fields / __dict__), not a hardcoded field list —
