@@ -1,7 +1,7 @@
 # Canonical test entry points (see ROADMAP "Tier-1 verify").
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-slow bench-temporal bench-smoke plan-report docs-check
+.PHONY: test test-all test-slow test-parity bench-temporal bench-smoke plan-report docs-check
 
 # tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
 test:
@@ -15,6 +15,11 @@ test-all:
 test-slow:
 	$(PY) -m pytest -q -m slow
 
+# the full cross-strategy parity matrix (PAPER_SUITE x boundary x strategy
+# x scenario kind), slow tier included — the ISSUE-8 acceptance sweep
+test-parity:
+	$(PY) -m pytest tests/test_parity.py tests/test_batched.py -q -m ""
+
 bench-temporal:
 	$(PY) benchmarks/bench_temporal.py
 
@@ -22,14 +27,16 @@ bench-temporal:
 # planner decision per PAPER_SUITE cell + calibrated factors),
 # BENCH_temporal.json (fused-sweep wall-clock vs model),
 # BENCH_serve.json (batched per-state cost vs B + serving-loop
-# throughput) and BENCH_rollout.json (fused segment programs vs
-# step-by-step) — run once per PR so the repo records how the cost model
-# and decisions drift over time.
+# throughput), BENCH_rollout.json (fused segment programs vs
+# step-by-step) and BENCH_varying.json (varying/masked scenario traffic
+# tax + masked skip fractions) — run once per PR so the repo records how
+# the cost model and decisions drift over time.
 bench-smoke:
 	$(PY) benchmarks/bench_plan.py --json
 	$(PY) benchmarks/bench_temporal.py --json
 	$(PY) benchmarks/bench_serve.py --json
 	$(PY) benchmarks/bench_rollout.py --json
+	$(PY) benchmarks/bench_varying.py --json
 
 # planner decision record for the PAPER_SUITE on TPU_V5E; the tier-1 golden
 # test (tests/test_plan_golden.py) diffs this output against

@@ -32,6 +32,15 @@ variable-size request stream onto both (DESIGN.md §Batch):
     server = api.StencilServer(api.box(2, 1), steps=8, max_batch=8)
     evolved = server.serve(list_of_states)
 
+Varying coefficients & masked domains (README §Varying coefficients,
+DESIGN.md §Scenarios): ``spec.with_field(a, domain_mask=m)`` attaches a
+per-point coefficient field and/or boolean domain mask to the spec — a
+first-class plan dimension (content-addressed cache identity, aux-band
+pricing, fusion-legality fallbacks) executed as an elementwise scale on
+the same banded-Toeplitz contractions; seeded generators
+:func:`random_coeff_field` / :func:`random_domain_mask` are re-exported
+here.
+
 Rollout programs (README §Rollout, DESIGN.md §Rollout): interleave fused
 sweeps with registered pointwise update operators (forcing terms,
 observation-style nudging, user callables) as one planned, cached,
@@ -57,7 +66,8 @@ from repro.core.planner import (CandidateCost, CompiledStencil, ExecutionPlan,
                                 candidate_cost, compile_plan,
                                 max_profitable_batch, plan, serving_buckets)
 from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
-                                     from_gather_coeffs, star)
+                                     from_gather_coeffs, random_coeff_field,
+                                     random_domain_mask, star)
 from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
                                     calibrate, measure_candidate)
 from repro.launch.serve_stencil import ServeStats, StencilServer
@@ -84,5 +94,5 @@ __all__ = [
     "StencilEngine", "Backend", "register_backend", "get_backend",
     "backend_names", "choose_cover", "legal_covers", "default_block",
     "StencilSpec", "box", "star", "diagonal", "from_gather_coeffs",
-    "PAPER_SUITE",
+    "random_coeff_field", "random_domain_mask", "PAPER_SUITE",
 ]

@@ -229,11 +229,18 @@ def _pallas_sweep_builder(plan: StencilPlan, steps: int, *,
                                   scratch=scratch)
 
 
+# separable factors the CONSTANT Toeplitz operator through its SVD and
+# codegen emits shift-add source from the constant taps — neither can
+# express a per-point coefficient scale or a domain mask, so both are
+# gated to constant dense specs.  jnp (matrixized_apply) and pallas
+# (aux-operand kernels) execute every spec kind.
 register_backend("jnp", _jnp_builder, mxu_efficiency=0.7)
 register_backend("separable", _separable_builder, mxu_efficiency=0.75,
-                 supports=lambda spec: spec.ndim == 2, uses_cover=False,
-                 flops_model=mx.separable_mxu_flops)
-register_backend("codegen", _codegen_builder, mxu_efficiency=0.8)
+                 supports=lambda spec: spec.ndim == 2 and
+                 spec.is_constant_dense,
+                 uses_cover=False, flops_model=mx.separable_mxu_flops)
+register_backend("codegen", _codegen_builder, mxu_efficiency=0.8,
+                 supports=lambda spec: spec.is_constant_dense)
 register_backend("pallas", _pallas_builder, mxu_efficiency=0.9,
                  sweep_builder=_pallas_sweep_builder)
 
@@ -346,14 +353,21 @@ class StencilEngine:
         The depth search is RESTRICTED to the strategies the pin allows
         (a pinned strategy must never execute at a depth tuned for the
         other one), and with everything "auto" one chooser call decides
-        both; ``grid`` caps the depth by shape/boundary first.
+        both; ``grid`` caps the depth by shape/boundary first.  For
+        varying/masked specs the chooser also filters by
+        :func:`temporal.fusion_legal` (boundary-aware), so "auto" falls
+        back to a legal pair on its own; an EXPLICITLY pinned illegal pair
+        raises instead of silently running the constant-coefficient fused
+        operator.
         """
         strategies = self._strategy_set(strategy)
+        spec, boundary = self.plan.spec, self.plan.boundary
         chosen = None
         if fuse == "auto":
             dec = temporal.choose_fuse_depth(self.plan.spec, steps,
                                              self.plan.block,
-                                             strategies=strategies)
+                                             strategies=strategies,
+                                             boundary=boundary)
             depth, chosen = dec.depth, dec.strategy
         else:
             depth = int(fuse)
@@ -362,15 +376,34 @@ class StencilEngine:
         capped = depth if grid is None else min(
             depth, max(steps, 1), self.max_fuse_depth(grid))
         if strategy != "auto":
+            self._check_fusion_legal(capped, strategy)
             return capped, strategy
         if chosen is not None and capped == depth:
             return capped, chosen
-        if capped <= 1 or "inkernel" not in strategies:
+        legal = [s for s in strategies
+                 if temporal.fusion_legal(spec, boundary, s, capped)]
+        if not legal:
+            # an explicit depth pin that no strategy can run exactly
+            self._check_fusion_legal(capped, strategies[0])
+        if capped <= 1 or "inkernel" not in legal:
             return capped, "operator"
         dec = temporal.choose_fuse_depth(self.plan.spec, capped,
                                          self.plan.block, max_depth=capped,
-                                         strategies=strategies)
+                                         strategies=tuple(legal),
+                                         boundary=boundary)
         return capped, dec.candidate(capped).strategy
+
+    def _check_fusion_legal(self, depth: int, strategy: str) -> None:
+        """Raise for a (strategy, depth) pair that is inexact for this
+        spec/boundary — the regression gate against silently applying the
+        constant-coefficient fused operator to a varying/masked spec."""
+        if not temporal.fusion_legal(self.plan.spec, self.plan.boundary,
+                                     strategy, depth):
+            raise ValueError(
+                f"fuse depth {depth} with strategy {strategy!r} is not "
+                f"exact for {self.plan.spec.describe()} at boundary="
+                f"{self.plan.boundary!r}; legal fallbacks: depth 1, or "
+                f"strategy='inkernel' under 'valid'/'periodic'")
 
     def sweep(self, x: jnp.ndarray, steps: int,
               fuse: int | str = "auto",
@@ -522,6 +555,7 @@ class StencilEngine:
         if strategy not in temporal.FUSE_STRATEGIES:
             raise ValueError(f"unknown fuse strategy {strategy!r}; choose "
                              f"from {temporal.FUSE_STRATEGIES}")
+        self._check_fusion_legal(t, strategy)
         if strategy == "inkernel":
             spec = self.plan.spec
             return halo.wrap_boundary(self.inkernel_core(t), t * spec.order,

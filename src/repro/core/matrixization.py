@@ -33,8 +33,13 @@ from repro.core.stencil_spec import StencilSpec
 __all__ = [
     "toeplitz_band",
     "toeplitz_band_np",
+    "banded_operator",
     "line_to_gather_band",
     "matrixized_apply",
+    "scenario_scale",
+    "aux_hbm_bytes",
+    "n_aux_operands",
+    "active_block_fraction",
     "separable_factors",
     "separable_apply",
     "matmul_count",
@@ -102,6 +107,69 @@ def toeplitz_band(band: np.ndarray, n_out: int, dtype=jnp.float32) -> jnp.ndarra
     the 1-D gather stencil ``band`` along the contracted axis.
     """
     return jnp.asarray(toeplitz_band_np(band, n_out), dtype=dtype)
+
+
+def banded_operator(band: np.ndarray, n_out: int,
+                    field_line: np.ndarray | None = None) -> np.ndarray:
+    """Per-axis banded operand: Toeplitz for constant coefficients, the
+    ``spdiags``-shaped banded matrix ``diag(field_line) @ T`` for a
+    varying-coefficient line (each output row carries its own point's
+    coefficient scale).
+
+    With ``field_line=None`` this IS :func:`toeplitz_band_np` bit-exactly —
+    the constant case reduces to the shared band.  The runtime paths never
+    materialize this matrix: they factor it as the shared Toeplitz
+    contraction followed by an elementwise f32 row scale
+    (:func:`scenario_scale`), preserving one ``dot_general`` per axis;
+    this constructor is the semantic definition those paths are tested
+    against (DESIGN.md §Scenarios).
+    """
+    t = toeplitz_band_np(band, n_out)
+    if field_line is None:
+        return t
+    a = np.asarray(field_line, dtype=np.float64)
+    if a.shape != (n_out,):
+        raise ValueError(f"field_line shape {a.shape} != ({n_out},)")
+    return a[:, None] * t
+
+
+def scenario_scale(acc: jnp.ndarray, spec: StencilSpec,
+                   accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Scale a valid-mode accumulator by a spec's scenario fields.
+
+    ``y = M * (a * acc)`` — the coefficient field and the domain mask are
+    CENTER-sliced to the accumulator's spatial extent (offset
+    ``(field_extent - out_extent) // 2`` per axis).  The centered slice is
+    the whole positional convention: under 'valid' evolution step ``s``'s
+    output sits ``s*r`` in from the original grid edge, which is exactly
+    the centered offset, and for shape-preserving boundaries the slice is
+    the identity.  Applied AFTER the banded-Toeplitz accumulation in f32
+    (the ``diag(a) @ T`` factorization), identically in every execution
+    path and the gather oracle, so cross-path parity stays bit-exact.
+    No-op for constant unmasked specs.
+    """
+    if spec.is_constant_dense:
+        return acc
+    ndim = spec.ndim
+    out_spatial = acc.shape[acc.ndim - ndim:]
+
+    def center(field):
+        f = np.asarray(field)
+        idx = []
+        for a, m in enumerate(out_spatial):
+            off = (f.shape[a] - m) // 2
+            if off < 0:
+                raise ValueError(
+                    f"scenario field extent {f.shape} smaller than output "
+                    f"extent {out_spatial}")
+            idx.append(slice(off, off + m))
+        return f[tuple(idx)]
+
+    if spec.is_varying:
+        acc = acc * jnp.asarray(center(spec.coeff_field), accum_dtype)
+    if spec.is_masked:
+        acc = acc * jnp.asarray(center(spec.domain_mask), accum_dtype)
+    return acc
 
 
 def line_to_gather_band(line: CoefficientLine, spec: StencilSpec):
@@ -189,6 +257,7 @@ def matrixized_apply(x: jnp.ndarray, spec: StencilSpec, cover: LineCover,
             out = out + _diagonal_contribution(x, spec, line, accum_dtype)
         else:
             out = out + _line_contribution(x, spec, line, accum_dtype)
+    out = scenario_scale(out, spec, accum_dtype)
     return out.astype(x.dtype)
 
 
@@ -380,6 +449,52 @@ def _batched_line_scale(m_rows: int, batch: int) -> float:
     if batch <= 1:
         return 1.0
     return _mxu_row_pad(batch * m_rows) / float(_mxu_row_pad(m_rows))
+
+
+def aux_hbm_bytes(block: tuple[int, ...], halo_width: int, n_aux: int,
+                  dtype_bytes: int = 4) -> float:
+    """Extra HBM bytes per block update for the scenario operands.
+
+    A varying-coefficient field and/or a domain mask is one extra streamed
+    read per auxiliary array per chunk: the output-aligned tile for a
+    single-step chunk (``halo_width=0``) or the ``T*r``-haloed slab window
+    for an in-kernel chunk (the per-step band re-read stays inside VMEM).
+    Shared across the batch — states differ, the coefficient field does
+    not — so this term does NOT scale with B.
+    """
+    if n_aux <= 0:
+        return 0.0
+    return n_aux * dtype_bytes * float(
+        np.prod([b + 2 * halo_width for b in block]))
+
+
+def n_aux_operands(spec: StencilSpec) -> int:
+    """How many scenario operands (field, mask) a spec streams per chunk."""
+    return int(spec.is_varying) + int(spec.is_masked)
+
+
+def active_block_fraction(mask: np.ndarray | None,
+                          block: tuple[int, ...]) -> float:
+    """Fraction of output tiles with at least one active (unmasked) point.
+
+    A fully-masked tile's output is identically zero whatever the operator
+    does, so a masked-domain cover may skip it; the planner scales the
+    compute and traffic terms by this fraction (pricing-level — runtime
+    correctness never depends on the skip, because masked outputs are
+    projected to zero anyway).  1.0 for unmasked specs.
+    """
+    if mask is None:
+        return 1.0
+    m = np.asarray(mask).astype(bool)
+    block = tuple(block[-m.ndim:])
+    total = 0
+    active = 0
+    for idx in np.ndindex(*[-(-s // b) for s, b in zip(m.shape, block)]):
+        sl = tuple(slice(i * b, min((i + 1) * b, s))
+                   for i, b, s in zip(idx, block, m.shape))
+        total += 1
+        active += bool(m[sl].any())
+    return active / total if total else 1.0
 
 
 def batched_mxu_flops(cover: LineCover, block: tuple[int, ...],

@@ -43,11 +43,14 @@ __all__ = ["PlanCache", "CachedExecutable", "cache_key"]
 
 
 def _spec_digest(spec) -> str:
-    """Stable identity of a stencil operator: coefficient bytes + tag."""
+    """Stable identity of a stencil operator: coefficient bytes + tag,
+    plus the content-addressed scenario digest — two specs differing only
+    in coefficient field or domain mask miss the cache separately."""
     c = np.ascontiguousarray(np.asarray(spec.gather_coeffs, np.float64))
     h = hashlib.sha1(c.tobytes())
     h.update(str(c.shape).encode())
     h.update(spec.shape.encode())
+    h.update(spec.scenario_digest().encode())
     return h.hexdigest()[:16]
 
 

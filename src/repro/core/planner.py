@@ -83,7 +83,7 @@ __all__ = ["StencilProblem", "CandidateCost", "ExecutionPlan",
            "max_profitable_batch", "serving_buckets", "factor_key",
            "FUSE_STRATEGIES", "PLAN_VERSION", "LAUNCH_OVERHEAD_S"]
 
-PLAN_VERSION = 5
+PLAN_VERSION = 6
 
 FUSE_STRATEGIES = temporal.FUSE_STRATEGIES
 
@@ -157,8 +157,19 @@ class StencilProblem:
         object.__setattr__(self, "batch", int(self.batch))
         if self.batch < 1:
             raise ValueError("batch >= 1")
+        for name, f in (("coeff_field", self.spec.coeff_field),
+                        ("domain_mask", self.spec.domain_mask)):
+            if f is not None and tuple(f.shape) != self.grid:
+                raise ValueError(f"spec {name} shape {tuple(f.shape)} != "
+                                 f"problem grid {self.grid} — scenario "
+                                 f"fields live on the problem grid")
         if (self.mesh is None) != (self.grid_axes is None):
             raise ValueError("mesh and grid_axes must be given together")
+        if self.mesh is not None and not self.spec.is_constant_dense:
+            raise ValueError("distributed planning does not support "
+                             "varying-coefficient or masked specs (the deep "
+                             "halo exchange does not yet ship the scenario "
+                             "fields); plan per device or drop the mesh")
         if self.grid_axes is not None:
             object.__setattr__(self, "grid_axes", tuple(self.grid_axes))
             if len(self.grid_axes) != self.spec.ndim:
@@ -192,9 +203,16 @@ class StencilProblem:
         return tuple(out)
 
     def to_dict(self) -> dict:
+        spec_d = {"gather_coeffs": np.asarray(self.spec.gather_coeffs).tolist(),
+                  "shape": self.spec.shape,
+                  "coefficients": self.spec.coefficients}
+        if self.spec.coeff_field is not None:
+            spec_d["coeff_field"] = np.asarray(self.spec.coeff_field).tolist()
+        if self.spec.domain_mask is not None:
+            spec_d["domain_mask"] = np.asarray(self.spec.domain_mask,
+                                               np.int8).tolist()
         return {
-            "spec": {"gather_coeffs": np.asarray(self.spec.gather_coeffs).tolist(),
-                     "shape": self.spec.shape},
+            "spec": spec_d,
             "grid": list(self.grid),
             "dtype": self.dtype,
             "boundary": self.boundary,
@@ -327,6 +345,20 @@ def _candidate(spec: StencilSpec, fspec: StencilSpec | None, depth: int,
     # traffic for both strategies (in-kernel intermediates never touch HBM)
     bytes_hbm = mx.batched_hbm_bytes(block, depth * spec.order,
                                      dtype_bytes, batch) * nb
+    # varying/masked band traffic: the per-point field (and mask) is read
+    # once per chunk alongside the state — f32, haloed to the chunk depth,
+    # NOT batch-scaled (the fields are shared across all states)
+    n_aux = mx.n_aux_operands(spec)
+    if n_aux:
+        bytes_hbm += mx.aux_hbm_bytes(block, depth * spec.order, n_aux) * nb
+    # masked-domain cover: tiles with no active point skip both the
+    # contraction and the write-back — modelled as the active-tile fraction
+    # scaling compute and traffic (pricing only; execution is exact either
+    # way since the mask zeroes the skipped outputs)
+    active = mx.active_block_fraction(spec.domain_mask, block)
+    if active < 1.0:
+        flops *= active
+        bytes_hbm *= active
     ici = 0.0
     for a in sharded_axes:
         face = float(np.prod([g for i, g in enumerate(local_grid) if i != a]))
@@ -412,7 +444,7 @@ def _ranked_blocks(spec: StencilSpec, local_grid: Sequence[int],
         # model the candidate loop scores with (per state, per element)
         flops = min(mx.batched_mxu_flops(cover, blk, batch)
                     for cover in covers)
-        if nd == 2:
+        if nd == 2 and spec.is_constant_dense:
             flops = min(flops, mx.separable_mxu_flops(spec, blk) * batch)
         t_c = flops / hw.peak_flops_bf16
         t_t = batch * bytes_of[blk] / hw.hbm_bw
@@ -508,7 +540,13 @@ class ExecutionPlan:
     @property
     def spec(self) -> StencilSpec:
         s = self.problem["spec"]
-        return from_gather_coeffs(np.asarray(s["gather_coeffs"]), s["shape"])
+        field = s.get("coeff_field")
+        mask = s.get("domain_mask")
+        return from_gather_coeffs(
+            np.asarray(s["gather_coeffs"]), s["shape"],
+            coefficients=s.get("coefficients", "constant"),
+            coeff_field=None if field is None else np.asarray(field),
+            domain_mask=None if mask is None else np.asarray(mask, bool))
 
     @property
     def steps(self) -> int:
@@ -583,14 +621,23 @@ class ExecutionPlan:
         ``depth`` fused-chunk length T, ``batch`` states advanced together
         (the problem's batch — every row of one plan shares it), ``strat``
         temporal strategy of the chunk ("operator" fused-operator |
-        "inkernel" T VMEM-resident base steps), ``cover`` coefficient-line
-        cover of the T-fused operator (of the BASE operator for inkernel
-        rows), ``backend`` registry entry, ``block`` output tile the row
-        was scored at, ``t_compute``/``t_traffic``/``t_comm`` calibrated
-        roofline seconds per fused sweep of the whole batch, ``t/model``
-        the UNcalibrated per-state-step score, ``t/step`` the calibrated
-        per-STATE-per-step score the ranking minimizes (the two columns
-        coincide when the plan carries no calibration).
+        "inkernel" T VMEM-resident base steps), ``coeff`` coefficient kind
+        of the spec ("const" | "vary" | "mask" | "vary+mask" — shared by
+        every row; varying/masked rows already carry the band-traffic tax
+        and the masked active-tile fraction in their scores), ``cover``
+        coefficient-line cover of the T-fused operator (of the BASE
+        operator for inkernel rows), ``backend`` registry entry, ``block``
+        output tile the row was scored at,
+        ``t_compute``/``t_traffic``/``t_comm`` calibrated roofline seconds
+        per fused sweep of the whole batch, ``t/model`` the UNcalibrated
+        per-state-step score, ``t/step`` the calibrated per-STATE-per-step
+        score the ranking minimizes (the two columns coincide when the
+        plan carries no calibration).
+
+        For varying/masked specs a ``fusion legality`` line states the
+        fallback decision explicitly: which (strategy, depth) pairs were
+        excluded and why, so a depth-1 plan is visibly a LEGAL fallback
+        rather than a cost-model preference.
         """
         p = self.problem
         spec = self.spec
@@ -627,9 +674,22 @@ class ExecutionPlan:
                 for be in sorted(set(cal["compute"]) | set(cal["traffic"])))
             lines.append(f"calibrated ({cal.get('hw', '?')} measured, "
                          f"compute/traffic factors): {facts}")
+        coeff_kind = ("const" if spec.is_constant_dense else "+".join(
+            (["vary"] if spec.is_varying else [])
+            + (["mask"] if spec.is_masked else [])))
+        if not spec.is_constant_dense:
+            from repro.core.temporal import fusion_legal
+            ink = fusion_legal(spec, self.boundary, "inkernel", 2)
+            lines.append(
+                f"fusion legality ({coeff_kind}): operator depth>1 excluded "
+                f"(per-step scale does not compose); inkernel depth>1 "
+                + (f"legal at boundary={self.boundary!r}" if ink else
+                   f"excluded at boundary={self.boundary!r} -> depth-1 "
+                   f"fallback"))
         lines.append(
-            "  rank depth batch strat    cover       backend     block    "
-            "    t_compute   t_traffic   t_comm      t/model     t/step")
+            "  rank depth batch strat    coeff     cover       backend     "
+            "block        t_compute   t_traffic   t_comm      t/model     "
+            "t/step")
         ranked = self.ranked()
         for i, c in enumerate(ranked[:top]):
             mark = "  <- chosen" if c.key == (
@@ -638,6 +698,7 @@ class ExecutionPlan:
             blk = "x".join(str(b) for b in c.block)
             lines.append(
                 f"  {i + 1:4d} {c.depth:5d} {c.batch:5d} {c.strategy:<8s} "
+                f"{coeff_kind:<9s} "
                 f"{c.option:<11s} {c.backend:<11s} "
                 f"{blk:<12s} "
                 f"{c.t_compute:.3e}   {c.t_traffic:.3e}   {c.t_comm:.3e}   "
@@ -800,8 +861,13 @@ def plan(problem: StencilProblem, hw=None, *,
     for t in depths:
         # depth 1 has no strategy (a chunk of one step IS the base
         # operator), so the baseline row is enumerated even under a
-        # pinned-inkernel search — mirroring temporal.choose_fuse_depth
-        if "operator" in strategies or t == 1:
+        # pinned-inkernel search — mirroring temporal.choose_fuse_depth.
+        # fusion_legal gates BOTH branches: a varying/masked spec never
+        # gets an operator row at t > 1 (the fused correlation cannot
+        # express the per-step scale) nor an inkernel row the boundary
+        # makes inexact — the planner cannot emit an illegal pair.
+        if ("operator" in strategies or t == 1) and \
+                temporal.fusion_legal(spec, problem.boundary, "operator", t):
             fspec = fused_specs.get(t)
             if fspec is None:
                 fspec = temporal.fuse_steps(spec, t)
@@ -824,7 +890,8 @@ def plan(problem: StencilProblem, hw=None, *,
                             sharded_axes, problem.boundary,
                             base_stats[blk][1], problem.dtype_bytes, hw,
                             calib, batch=problem.batch))
-        if "inkernel" in strategies and t > 1:
+        if "inkernel" in strategies and t > 1 and \
+                temporal.fusion_legal(spec, problem.boundary, "inkernel", t):
             # T base-radius steps per kernel instance: the cover is the
             # BASE spec's (re-applied every step), only backends with a
             # registered sweep_builder can execute it, and the deep slab

@@ -8,10 +8,29 @@ coefficient tensors are related by full index reversal, ``Cs = J Cg J``
 
 Conventions (paper footnote 1): C-style storage; for 2-D stencils the index
 is (i, j) with j contiguous; for 3-D it is (i, j, k) with k contiguous.
+
+Beyond the constant-coefficient core, a spec may carry two per-point
+scenario fields (DESIGN.md §Scenarios):
+
+* ``coefficients="varying"`` with a ``coeff_field`` — a scalar field
+  ``a`` on the problem grid scaling each output point:
+  ``y[p] = a[p] * (L x)[p]``.  Per axis the banded Toeplitz operand
+  becomes the banded matrix ``diag(a_line) @ T`` (the ``spdiags`` shape),
+  executed as the shared Toeplitz contraction followed by an elementwise
+  f32 row scale so the one-``dot_general``-per-axis structure survives.
+* ``domain_mask`` — a boolean indicator of the active domain; each step
+  projects its output onto the mask (``y = M * (a * (L x))``), which is
+  the obstacle / land-sea masking workload.
+
+Both fields are spatial (no batch axis), align CENTERED against any
+valid-mode output (offset ``(field_extent - out_extent) // 2`` per axis),
+and are content-addressed (:meth:`StencilSpec.scenario_digest`) for plan
+and cache identity.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Sequence
 
 import numpy as np
@@ -22,6 +41,8 @@ __all__ = [
     "star",
     "diagonal",
     "from_gather_coeffs",
+    "random_coeff_field",
+    "random_domain_mask",
     "PAPER_SUITE",
 ]
 
@@ -38,12 +59,21 @@ class StencilSpec:
         (2r+1,)*ndim.  Entry ``Cg[o]`` multiplies input at offset
         ``o - r`` relative to the output point (Eq. 1/2).
       shape: descriptive tag ("box" | "star" | "diagonal" | "general").
+      coefficients: "constant" (the paper's case — one shared tap tensor)
+        or "varying" (a per-point scalar field scales the update).
+      coeff_field: the scalar coefficient field ``a`` on the problem grid
+        (required iff ``coefficients="varying"``; float64, spatial only).
+      domain_mask: optional boolean active-domain indicator on the problem
+        grid; every step's output is projected onto it.
     """
 
     ndim: int
     order: int
     gather_coeffs: np.ndarray
     shape: str = "general"
+    coefficients: str = "constant"
+    coeff_field: np.ndarray | None = None
+    domain_mask: np.ndarray | None = None
 
     def __post_init__(self):
         c = np.asarray(self.gather_coeffs, dtype=np.float64)
@@ -54,6 +84,30 @@ class StencilSpec:
                 f"gather_coeffs shape {c.shape} != {expect} for ndim="
                 f"{self.ndim}, order={self.order}"
             )
+        if self.coefficients not in ("constant", "varying"):
+            raise ValueError(
+                f"coefficients must be 'constant' or 'varying', got "
+                f"{self.coefficients!r}")
+        if self.coefficients == "varying":
+            if self.coeff_field is None:
+                raise ValueError("coefficients='varying' requires coeff_field")
+            f = np.asarray(self.coeff_field, dtype=np.float64)
+            if f.ndim != self.ndim:
+                raise ValueError(
+                    f"coeff_field ndim {f.ndim} != spec ndim {self.ndim}")
+            object.__setattr__(self, "coeff_field", f)
+        elif self.coeff_field is not None:
+            raise ValueError("coeff_field given but coefficients='constant'")
+        if self.domain_mask is not None:
+            m = np.asarray(self.domain_mask).astype(bool)
+            if m.ndim != self.ndim:
+                raise ValueError(
+                    f"domain_mask ndim {m.ndim} != spec ndim {self.ndim}")
+            if self.coeff_field is not None and m.shape != self.coeff_field.shape:
+                raise ValueError(
+                    f"domain_mask shape {m.shape} != coeff_field shape "
+                    f"{self.coeff_field.shape}")
+            object.__setattr__(self, "domain_mask", m)
 
     # -- scatter duality (Eq. 5): Cs = J Cg J = reverse every axis ---------
     @property
@@ -77,9 +131,68 @@ class StencilSpec:
     def with_coeffs(self, gather_coeffs: np.ndarray) -> "StencilSpec":
         return dataclasses.replace(self, gather_coeffs=np.asarray(gather_coeffs))
 
+    # -- scenario fields (varying coefficients / masked domains) -----------
+    @property
+    def is_varying(self) -> bool:
+        return self.coefficients == "varying"
+
+    @property
+    def is_masked(self) -> bool:
+        return self.domain_mask is not None
+
+    @property
+    def is_constant_dense(self) -> bool:
+        """The paper's base case: constant coefficients on a dense box."""
+        return not self.is_varying and not self.is_masked
+
+    def with_field(self, coeff_field: np.ndarray,
+                   domain_mask: np.ndarray | None = None) -> "StencilSpec":
+        """A varying-coefficient copy of this spec (optionally masked)."""
+        return dataclasses.replace(
+            self, coefficients="varying", coeff_field=np.asarray(coeff_field),
+            domain_mask=(self.domain_mask if domain_mask is None
+                         else domain_mask))
+
+    def with_mask(self, domain_mask: np.ndarray) -> "StencilSpec":
+        """A masked-domain copy of this spec."""
+        return dataclasses.replace(self, domain_mask=np.asarray(domain_mask))
+
+    def base(self) -> "StencilSpec":
+        """The constant-coefficient unmasked core of this spec."""
+        if self.is_constant_dense:
+            return self
+        return dataclasses.replace(self, coefficients="constant",
+                                   coeff_field=None, domain_mask=None)
+
+    def scenario_digest(self) -> str:
+        """Content address of the scenario fields ('' for the base case).
+
+        Two specs differing only in coefficient field or mask must be
+        distinct plan-cache identities; the digest covers kind, bytes and
+        shape of both fields.
+        """
+        if self.is_constant_dense:
+            return ""
+        h = hashlib.sha1()
+        h.update(self.coefficients.encode())
+        if self.coeff_field is not None:
+            h.update(str(self.coeff_field.shape).encode())
+            h.update(np.ascontiguousarray(self.coeff_field).tobytes())
+        h.update(b"|mask|")
+        if self.domain_mask is not None:
+            h.update(str(self.domain_mask.shape).encode())
+            h.update(np.ascontiguousarray(self.domain_mask).tobytes())
+        return h.hexdigest()[:16]
+
     def describe(self) -> str:
         names = {2: "2D", 3: "3D", 1: "1D"}
-        return f"{names.get(self.ndim, f'{self.ndim}D')}{self.taps}P {self.shape} (r={self.order})"
+        tag = f"{names.get(self.ndim, f'{self.ndim}D')}{self.taps}P {self.shape} (r={self.order})"
+        extras = []
+        if self.is_varying:
+            extras.append("varying")
+        if self.is_masked:
+            extras.append("masked")
+        return tag + (f" [{'+'.join(extras)}]" if extras else "")
 
 
 def _rng_coeffs(shape, mask, seed):
@@ -136,13 +249,43 @@ def diagonal(order: int, coeffs: np.ndarray | None = None, seed: int = 0) -> Ste
     return StencilSpec(ndim=2, order=order, gather_coeffs=coeffs, shape="diagonal")
 
 
-def from_gather_coeffs(coeffs: np.ndarray, shape: str = "general") -> StencilSpec:
+def random_coeff_field(grid: Sequence[int], seed: int = 0,
+                       lo: float = 0.5, hi: float = 1.5) -> np.ndarray:
+    """Seeded positive scalar coefficient field on ``grid`` (float64).
+
+    Bounded away from 0 so repeated application stays well-conditioned;
+    the shared generator for tests, benchmarks and docs.
+    """
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=tuple(grid))
+
+
+def random_domain_mask(grid: Sequence[int], seed: int = 0,
+                       active: float = 0.75) -> np.ndarray:
+    """Seeded boolean domain mask on ``grid`` with ~``active`` fraction
+    active: a random rectangular obstacle (a contiguous inactive hole)
+    plus salt noise — the land/sea-mask shape rather than pure speckle."""
+    rng = np.random.default_rng(seed)
+    mask = np.ones(tuple(grid), dtype=bool)
+    hole = tuple(slice(g // 4, g // 4 + max(1, int(g * (1.0 - active) ** 0.5)))
+                 for g in grid)
+    mask[hole] = False
+    mask &= rng.uniform(size=tuple(grid)) < (active ** 0.25)
+    return mask
+
+
+def from_gather_coeffs(coeffs: np.ndarray, shape: str = "general", *,
+                       coefficients: str = "constant",
+                       coeff_field: np.ndarray | None = None,
+                       domain_mask: np.ndarray | None = None) -> StencilSpec:
     c = np.asarray(coeffs)
     ndim = c.ndim
     if len(set(c.shape)) != 1 or c.shape[0] % 2 != 1:
         raise ValueError(f"coefficient tensor must be odd-cubic, got {c.shape}")
     order = (c.shape[0] - 1) // 2
-    return StencilSpec(ndim=ndim, order=order, gather_coeffs=c, shape=shape)
+    return StencilSpec(ndim=ndim, order=order, gather_coeffs=c, shape=shape,
+                       coefficients=coefficients, coeff_field=coeff_field,
+                       domain_mask=domain_mask)
 
 
 def PAPER_SUITE() -> dict[str, StencilSpec]:

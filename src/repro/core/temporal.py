@@ -34,7 +34,7 @@ __all__ = ["fuse_steps", "fused_flops_ratio", "fused_traffic_ratio",
            "inkernel_flops_ratio", "inkernel_traffic_ratio",
            "fuse_schedule", "FUSE_STRATEGIES", "SCRATCH_MODES",
            "check_scratch", "FuseCandidate", "FuseDecision",
-           "choose_fuse_depth"]
+           "choose_fuse_depth", "fusion_legal"]
 
 #: The two executable temporal-blocking strategies: "operator" composes T
 #: steps into one stencil of radius T*r (this module's fuse_steps);
@@ -65,10 +65,54 @@ def _correlate_full(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return out
 
 
+def fusion_legal(spec: StencilSpec, boundary: str, strategy: str,
+                 depth: int) -> bool:
+    """Whether a (strategy, depth) temporal-blocking pair is EXACT.
+
+    Depth <= 1 is always legal (it IS the sequential evolution), and
+    constant-coefficient unmasked specs keep their existing rules (the
+    engine layers boundary splicing on top).  For varying/masked specs the
+    per-step scale does not commute with composition:
+
+    - "operator" at depth > 1 is NEVER legal — the fused correlation
+      ``C^(*T)`` would have to become a step-dependent product of scaled
+      operators, which is no longer a shared Toeplitz band.
+    - "inkernel" at depth > 1 IS legal for 'valid'/'periodic' — the kernel
+      re-reads the band and re-applies the scale at every step, and the
+      slab extension (none / wrap) matches the true evolution.  'zero' is
+      illegal: the zero-extended strip splice assumes a position-
+      independent operator.
+
+    Every execution path funnels through this predicate (planner candidate
+    table, engine resolve, fuse-depth chooser), so an illegal pair can be
+    neither planned nor executed silently.
+    """
+    if depth <= 1:
+        return True
+    if spec.is_constant_dense:
+        return True
+    if strategy == "operator":
+        return False
+    return boundary in ("valid", "periodic")
+
+
 def fuse_steps(spec: StencilSpec, steps: int) -> StencilSpec:
-    """Spec whose single application equals ``steps`` applications."""
+    """Spec whose single application equals ``steps`` applications.
+
+    Only constant-coefficient unmasked specs compose — a varying or masked
+    spec raises at ``steps > 1`` (see :func:`fusion_legal`) and passes
+    through unchanged at ``steps == 1`` (its scenario fields must survive).
+    """
     if steps < 1:
         raise ValueError("steps >= 1")
+    if not spec.is_constant_dense:
+        if steps > 1:
+            raise ValueError(
+                "operator fusion is not exact for varying-coefficient or "
+                "masked specs: the per-step scale does not commute with "
+                "correlation composition (use strategy='inkernel' or "
+                "depth 1)")
+        return spec
     c = np.asarray(spec.gather_coeffs, np.float64)
     acc = c
     for _ in range(steps - 1):
@@ -175,8 +219,8 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
                       hbm_bw: float | None = None,
                       dtype_bytes: int = 4,
                       max_depth: int = 8,
-                      strategies: Sequence[str] = ("operator",)
-                      ) -> FuseDecision:
+                      strategies: Sequence[str] = ("operator",),
+                      *, boundary: str | None = None) -> FuseDecision:
     """Pick the (fuse depth T, strategy) minimizing modelled time per
     original step.
 
@@ -189,6 +233,14 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
     ``repro.launch.mesh.TPU_V5E``.  Only the strategies the caller's
     backend can execute should be passed (the engine passes "inkernel" only
     when its backend registers a ``sweep_builder``).
+
+    ``boundary`` filters candidates through :func:`fusion_legal` — needed
+    for varying/masked specs, where deep fusion may be inexact.  When not
+    given, scenario specs assume the most conservative boundary ('zero' —
+    depth 1 both strategies) so an uninformed call can never pick an
+    illegal depth; constant specs are unaffected (every pair is legal).
+    Varying/masked specs also price their per-sweep band re-read
+    (:func:`repro.core.matrixization.aux_hbm_bytes`) into the traffic side.
     """
     # deferred imports: engine imports us at module load; launch is lazy so
     # the core layer carries no hardware constants of its own
@@ -207,20 +259,25 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
         hbm_bw = TPU_V5E.hbm_bw if hbm_bw is None else hbm_bw
     block = tuple(block) if block is not None else default_block(spec)
     r = spec.order
+    n_aux = mx.n_aux_operands(spec)
+    eff_boundary = boundary if boundary is not None else "zero"
 
-    base_bytes = _block_bytes(block, r, dtype_bytes)  # one unfused sweep
+    base_bytes = _block_bytes(block, r, dtype_bytes) \
+        + mx.aux_hbm_bytes(block, r, n_aux)          # one unfused sweep
     # the unfused cover: the per-step operator of every inkernel candidate
     # AND the t=1 baseline row (depth 1 has no strategy, so the baseline is
     # enumerated even under a pinned-inkernel search)
     base_option, base_cover = choose_cover(spec, block[0])
     cands = []
     for t in range(1, min(steps, max_depth) + 1):
-        bytes_ = _block_bytes(block, t * r, dtype_bytes)
+        bytes_ = _block_bytes(block, t * r, dtype_bytes) \
+            + mx.aux_hbm_bytes(block, t * r, n_aux)
         t_traf = bytes_ / hbm_bw
         # per original step: the fused sweep advances t steps at once, so
         # its traffic is base * (bytes_/base) * fused_traffic_ratio(t) ...
         reduction = base_bytes / (bytes_ * fused_traffic_ratio(t))
-        if "operator" in strategies or t == 1:
+        if ("operator" in strategies or t == 1) and \
+                fusion_legal(spec, eff_boundary, "operator", t):
             if t == 1:
                 option, cover = base_option, base_cover
             else:
@@ -234,6 +291,7 @@ def choose_fuse_depth(spec: StencilSpec, steps: int,
                 t_per_step=max(t_comp, t_traf) / t,
                 traffic_reduction=reduction, strategy="operator"))
         if "inkernel" in strategies and t > 1 and \
+                fusion_legal(spec, eff_boundary, "inkernel", t) and \
                 mx.inkernel_vmem_bytes(block, t, r, dtype_bytes,
                                        cover=base_cover) <= mx.VMEM_BUDGET:
             # the deep slab + double-buffered intermediates must stay

@@ -16,7 +16,8 @@ from jax import lax
 from repro.core import halo
 
 __all__ = ["EvolveResult", "boundary_step", "evolve", "evolve_until",
-           "evolve_fused", "evolve_compiled"]
+           "evolve_fused", "evolve_compiled", "reference_step",
+           "reference_evolve"]
 
 
 class EvolveResult(NamedTuple):
@@ -33,6 +34,33 @@ def boundary_step(core: Callable, order: int, ndim: int,
     matrixized, Pallas) this produces the step function ``evolve`` needs.
     """
     return halo.wrap_boundary(core, order, ndim, boundary)
+
+
+def reference_step(spec, boundary: str) -> Callable:
+    """Gather-mode reference step for any spec kind (the parity oracle).
+
+    One application of the naive gather oracle (:func:`kernels.ref
+    .stencil_ref`) at the given boundary — including the varying-
+    coefficient scale and domain-mask projection when the spec carries
+    them.  This is the ground-truth step the parity harness iterates; it
+    never touches the matrixized path.
+    """
+    from repro.kernels.ref import stencil_ref
+
+    def step(x):
+        return stencil_ref(x, spec, boundary=boundary)
+
+    return step
+
+
+def reference_evolve(spec, x: jnp.ndarray, steps: int,
+                     boundary: str) -> jnp.ndarray:
+    """``steps`` applications of :func:`reference_step` (un-jitted loop —
+    'valid' shrinks the grid each step, so no fori_loop)."""
+    step = reference_step(spec, boundary)
+    for _ in range(steps):
+        x = step(x)
+    return x
 
 
 def evolve(step_fn: Callable, x: jnp.ndarray, steps: int,

@@ -55,10 +55,91 @@ def pallas_sweep_core(plan, steps: int, *, interpret: bool = True,
     core, so the halo layer and the distributed deep-halo protocol drive it
     unchanged.  ``scratch`` picks the VMEM intermediate policy
     (``"pingpong"`` double buffer | ``"single"`` half the residency).
+
+    The engine hands this core pre-padded arrays and drives it at
+    ``boundary="valid"``, so for varying/masked specs the TRUE boundary is
+    forwarded as ``aux_boundary`` — the coefficient field must be extended
+    into the halo ring the same way the state was.
     """
     return functools.partial(stencil_sweep_matrixized, spec=plan.spec,
                              steps=steps, cover=plan.cover, block=plan.block,
-                             interpret=interpret, scratch=scratch)
+                             interpret=interpret, scratch=scratch,
+                             aux_boundary=plan.boundary)
+
+
+def _center_slice(f: np.ndarray, out_sizes) -> np.ndarray:
+    """Center a grid-resident scenario field on a smaller output extent.
+
+    Offset ``(field_extent - out_extent) // 2`` per axis — the positional
+    convention shared with the gather oracle (:func:`repro.kernels.ref
+    .scenario_scale`), which makes valid-mode shrinkage line up
+    automatically (after s valid steps the offset is ``s*r``).
+    """
+    idx = []
+    for s, m in zip(f.shape, out_sizes):
+        off = (s - m) // 2
+        if off < 0:
+            raise ValueError(f"scenario field extent {f.shape} smaller than "
+                             f"output extent {tuple(out_sizes)}")
+        idx.append(slice(off, off + m))
+    return f[tuple(idx)]
+
+
+def _scenario_aux_single(spec: StencilSpec, out_sizes,
+                         block) -> tuple[jnp.ndarray, ...]:
+    """OUTPUT-aligned aux operands for the single-step kernel.
+
+    Field then mask, each center-sliced to the valid output extent and
+    zero-padded on the trailing edge to tile multiples (the padded rows are
+    cropped with the output).
+    """
+    if spec.is_constant_dense:
+        return ()
+    aux = []
+    for f in (spec.coeff_field, spec.domain_mask):
+        if f is None:
+            continue
+        a = _center_slice(np.asarray(f, np.float32), out_sizes)
+        pads = [(0, (-s) % b) for s, b in zip(out_sizes, block)]
+        if any(p[1] for p in pads):
+            a = np.pad(a, pads)
+        aux.append(jnp.asarray(a, jnp.float32))
+    return tuple(aux)
+
+
+def _scenario_aux_sweep(spec: StencilSpec, out_sizes, w: int, block,
+                        aux_boundary: str) -> tuple[jnp.ndarray, ...]:
+    """SLAB-aligned aux operands for the in-kernel sweep.
+
+    Each field is extended centered from its grid extent to the haloed slab
+    extent (``out + 2w`` per axis) with the TRUE boundary's pad mode — wrap
+    for periodic, zeros otherwise — so every step's sub-slice sees the same
+    extension the state does, then zero-padded to tile multiples.
+    """
+    if spec.is_constant_dense:
+        return ()
+    target = tuple(s + 2 * w for s in out_sizes)
+    mode = halo.pad_mode(aux_boundary) or "constant"
+    aux = []
+    for f in (spec.coeff_field, spec.domain_mask):
+        if f is None:
+            continue
+        a = np.asarray(f, np.float32)
+        # a valid-mode chain whose state already shrank needs the centered
+        # SLICE on axes where the grid field exceeds the slab
+        a = _center_slice(a, tuple(min(s, t)
+                                   for s, t in zip(a.shape, target)))
+        pads = []
+        for s, t in zip(a.shape, target):
+            left = (t - s) // 2
+            pads.append((left, t - s - left))
+        if any(p != (0, 0) for p in pads):
+            a = np.pad(a, pads, mode=mode)
+        tile = [(0, (-(t - 2 * w)) % b) for t, b in zip(target, block)]
+        if any(p[1] for p in tile):
+            a = np.pad(a, tile)
+        aux.append(jnp.asarray(a, jnp.float32))
+    return tuple(aux)
 
 
 def _pad_to_multiple(x, block, w, ndim):
@@ -140,10 +221,13 @@ def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
         block = _default_block(spec, out_sizes, spec.order, batch)
     block = tuple(min(b, s) for b, s in zip(block, out_sizes))
 
+    aux = _scenario_aux_single(spec, out_sizes, block)
+
     if not lead:
         xs = _pad_to_multiple(x, block, spec.order, spec.ndim)
         plan = stencil_mxu.build_kernel_plan(spec, cover, block)
-        out = stencil_mxu.stencil_pallas_call(xs, plan, interpret=interpret)
+        out = stencil_mxu.stencil_pallas_call(xs, plan, interpret=interpret,
+                                              aux=aux)
         return out[tuple(slice(0, s) for s in out_sizes)]
     if batch == 0:   # empty batch: the old vmap path returned empty too
         return jnp.zeros(lead + out_sizes, x.dtype)
@@ -157,7 +241,8 @@ def stencil_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
 
     def call(xc, b):
         plan = stencil_mxu.build_kernel_plan(spec, cover, block, batch=b)
-        return stencil_mxu.stencil_pallas_call(xc, plan, interpret=interpret)
+        return stencil_mxu.stencil_pallas_call(xc, plan, interpret=interpret,
+                                               aux=aux)
 
     chunk = _feasible_fold(batch, lambda c: mx.batched_vmem_bytes(
         block, spec.order, x.dtype.itemsize, c))
@@ -173,7 +258,8 @@ def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
                              option: str = "parallel",
                              boundary: str = "valid",
                              interpret: bool = True,
-                             scratch: str = "pingpong") -> jnp.ndarray:
+                             scratch: str = "pingpong",
+                             aux_boundary: str | None = None) -> jnp.ndarray:
     """``steps`` stencil applications in ONE in-kernel temporally-blocked
     pass (paper §6 x §4.3).  Batch axes lead (folded into the kernel's
     batch dimension — one launch, shared per-step band operands).
@@ -184,9 +270,22 @@ def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
     evolution — the engine splices per-step-exact strips on top, exactly as
     it does for operator fusion).  ``scratch`` picks the VMEM intermediate
     policy ("pingpong" double buffer | "single" half the residency).
+
+    Varying/masked specs re-read their fields at every in-kernel step; the
+    field is extended to the deep-halo slab with ``aux_boundary`` (defaults
+    to ``boundary`` — the engine passes the TRUE boundary here because it
+    pre-pads and calls at 'valid').  The zero-extended multi-step evolution
+    is NOT per-step exact for scenario specs (the strip splice assumes a
+    position-independent operator), so 'zero' at ``steps > 1`` is rejected.
     """
     if steps < 1:
         raise ValueError("steps >= 1")
+    if aux_boundary is None:
+        aux_boundary = boundary
+    if steps > 1 and aux_boundary == "zero" and not spec.is_constant_dense:
+        raise ValueError(
+            "in-kernel sweep with steps > 1 is not exact for varying/"
+            "masked specs at boundary='zero' (fall back to depth 1)")
     w = steps * spec.order
     x = halo.pad_halo(x, w, spec.ndim, boundary)
     lead = x.shape[: x.ndim - spec.ndim]
@@ -202,11 +301,14 @@ def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
         block = _default_block(spec, out_sizes, w, batch)
     block = tuple(min(b, s) for b, s in zip(block, out_sizes))
 
+    aux = _scenario_aux_sweep(spec, out_sizes, w, block, aux_boundary)
+
     if not lead:
         xs = _pad_to_multiple(x, block, w, spec.ndim)
         plan = stencil_mxu.build_sweep_kernel_plan(spec, cover, block, steps,
                                                    scratch=scratch)
-        out = stencil_mxu.sweep_pallas_call(xs, plan, interpret=interpret)
+        out = stencil_mxu.sweep_pallas_call(xs, plan, interpret=interpret,
+                                            aux=aux)
         return out[tuple(slice(0, s) for s in out_sizes)]
     if batch == 0:   # empty batch: the old vmap path returned empty too
         return jnp.zeros(lead + out_sizes, x.dtype)
@@ -218,7 +320,8 @@ def stencil_sweep_matrixized(x: jnp.ndarray, *, spec: StencilSpec,
     def call(xc, b):
         plan = stencil_mxu.build_sweep_kernel_plan(
             spec, cover, block, steps, batch=b, scratch=scratch)
-        return stencil_mxu.sweep_pallas_call(xc, plan, interpret=interpret)
+        return stencil_mxu.sweep_pallas_call(xc, plan, interpret=interpret,
+                                             aux=aux)
 
     chunk = _feasible_fold(batch, lambda c: mx.inkernel_vmem_bytes(
         block, steps, spec.order, x.dtype.itemsize, cover=cover, batch=c,

@@ -13,7 +13,39 @@ import jax.numpy as jnp
 from repro.core import halo
 from repro.core.stencil_spec import StencilSpec
 
-__all__ = ["stencil_ref", "stencil_ref_conv", "banded_mixer_ref"]
+__all__ = ["stencil_ref", "stencil_ref_conv", "banded_mixer_ref",
+           "scenario_scale"]
+
+
+def scenario_scale(acc: jnp.ndarray, spec: StencilSpec, ndim: int,
+                   accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Apply a spec's scenario fields to a valid-mode f32 accumulator.
+
+    ``y = M * (a * acc)`` with the coefficient field ``a`` and domain mask
+    ``M`` CENTER-sliced to the accumulator's spatial extent (offset
+    ``(field_extent - out_extent) // 2`` per axis — the positional
+    convention every execution path and this oracle share, so parity stays
+    bit-exact).  No-op for constant unmasked specs.
+    """
+    out_spatial = acc.shape[acc.ndim - ndim:]
+
+    def center(field):
+        f = np.asarray(field)
+        idx = []
+        for a, m in enumerate(out_spatial):
+            off = (f.shape[a] - m) // 2
+            if off < 0:
+                raise ValueError(
+                    f"scenario field extent {f.shape} smaller than output "
+                    f"extent {out_spatial}")
+            idx.append(slice(off, off + m))
+        return f[tuple(idx)]
+
+    if spec.is_varying:
+        acc = acc * jnp.asarray(center(spec.coeff_field), accum_dtype)
+    if spec.is_masked:
+        acc = acc * jnp.asarray(center(spec.domain_mask), accum_dtype)
+    return acc
 
 
 def stencil_ref(x: jnp.ndarray, spec: StencilSpec, accum_dtype=jnp.float32,
@@ -22,7 +54,10 @@ def stencil_ref(x: jnp.ndarray, spec: StencilSpec, accum_dtype=jnp.float32,
 
     Leading axes beyond ``spec.ndim`` are batch axes.  ``boundary`` follows
     the shared halo layer: 'valid' shrinks by ``spec.order`` per side;
-    'zero'/'periodic' are shape-preserving.
+    'zero'/'periodic' are shape-preserving.  Varying-coefficient and masked
+    specs scale the accumulated sum per point (``y = M * (a * sum)``, f32,
+    before the output cast) — gather-mode ground truth for the scenario
+    paths too.
     """
     ndim, r = spec.ndim, spec.order
     x = halo.pad_halo(x, r, ndim, boundary)
@@ -39,6 +74,7 @@ def stencil_ref(x: jnp.ndarray, spec: StencilSpec, accum_dtype=jnp.float32,
             index[a] = slice(o, o + x.shape[a] - 2 * r)
         term = jnp.asarray(c, accum_dtype) * x[tuple(index)].astype(accum_dtype)
         out = term if out is None else out + term
+    out = scenario_scale(out, spec, ndim, accum_dtype)
     return out.astype(x.dtype)
 
 

@@ -90,6 +90,11 @@ class KernelPlan:
     # degenerate taps: (coeff, gather offsets per axis)
     point_taps: tuple[tuple[float, tuple[int, ...]], ...]
     batch: int | None = None
+    # scenario operands (coefficient field and/or domain mask): extra
+    # OUTPUT-aligned f32 inputs, each multiplied into the accumulator
+    # before the write-back (the diag(a) @ T row scale).  Shared across
+    # the batch — no leading axis.
+    n_aux: int = 0
 
     @property
     def mxu_dots(self) -> int:
@@ -172,7 +177,8 @@ def build_kernel_plan(spec: StencilSpec, cover: LineCover,
         for axis, band, fixed in band_lines)
     return KernelPlan(spec=spec, block=tuple(block),
                       mat_lines=mat_lines, point_taps=point_taps,
-                      batch=None if batch is None else int(batch))
+                      batch=None if batch is None else int(batch),
+                      n_aux=mx.n_aux_operands(spec))
 
 
 def _apply_step(slab, *, spec: StencilSpec, out_ext: tuple[int, ...],
@@ -222,13 +228,21 @@ def _apply_step(slab, *, spec: StencilSpec, out_ext: tuple[int, ...],
 def _make_kernel(plan: KernelPlan, out_dtype):
     groups = plan.axis_groups()
     axis_meta = [(axis, fixeds) for axis, _, fixeds in groups]
+    n_t = len(groups)
 
     def kernel(x_ref, *refs):
-        t_refs, o_ref = refs[:-1], refs[-1]
+        t_refs = refs[:n_t]
+        aux_refs = refs[n_t:n_t + plan.n_aux]
+        o_ref = refs[-1]
         slab = x_ref[...]
         acc = _apply_step(slab, spec=plan.spec, out_ext=plan.block,
                           axis_ts=[t[...] for t in t_refs],
                           axis_meta=axis_meta, point_taps=plan.point_taps)
+        # scenario operands: output-aligned tiles, f32 elementwise scale
+        # (diag(a) @ T factored as contract-then-row-scale); aux carries
+        # no batch axis, trailing-dim broadcast covers the batched acc
+        for a_ref in aux_refs:
+            acc = acc * a_ref[...]
         o_ref[...] = acc.astype(out_dtype)
 
     return kernel
@@ -261,7 +275,8 @@ def _check_batched_input(x, plan, nd, halo_width):
 
 
 def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: bool = True,
+                        aux: Sequence[jnp.ndarray] = ()) -> jnp.ndarray:
     """Run the matrixized stencil kernel over a haloed spatial array.
 
     ``x``: (S_0 + 2r, ..., S_{d-1} + 2r) haloed input; returns (S_0, ...,
@@ -270,11 +285,19 @@ def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
     batch axis of that extent precedes the spatial axes on input and
     output: the grid stays spatial (one instance owns every state's tile)
     and the per-axis contraction count does not grow with the batch.
+
+    ``aux``: ``plan.n_aux`` OUTPUT-aligned f32 scenario operands
+    (coefficient field, then domain mask), spatial shape == out shape —
+    each tiled with the output BlockSpec and multiplied into the
+    accumulator (shared across the batch).
     """
     nd, r = plan.spec.ndim, plan.spec.order
     block = plan.block
     out_shape, grid = _check_batched_input(x, plan, nd, r)
     lead = () if plan.batch is None else (plan.batch,)
+    if len(aux) != plan.n_aux:
+        raise ValueError(f"plan expects {plan.n_aux} aux operand(s), "
+                         f"got {len(aux)}")
 
     in_specs = [element_block_spec(
         lead + tuple(b + 2 * r for b in block),
@@ -285,6 +308,13 @@ def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
     for _axis, t, _fixeds in plan.axis_groups():
         t_inputs.append(jnp.asarray(t, jnp.float32))
         in_specs.append(_broadcast_spec(t))
+    aux_inputs = []
+    for a in aux:
+        if tuple(a.shape) != out_shape:
+            raise ValueError(f"aux operand shape {a.shape} != output "
+                             f"spatial shape {out_shape}")
+        aux_inputs.append(jnp.asarray(a, jnp.float32))
+        in_specs.append(pl.BlockSpec(block, lambda *ids: tuple(ids)))
 
     out_spec = pl.BlockSpec(lead + block,
                             lambda *ids: (0,) * len(lead) + tuple(ids))
@@ -296,7 +326,7 @@ def stencil_pallas_call(x: jnp.ndarray, plan: KernelPlan,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(lead + out_shape, x.dtype),
         interpret=interpret,
-    )(x, *t_inputs)
+    )(x, *t_inputs, *aux_inputs)
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +357,13 @@ class SweepKernelPlan:
     point_taps: tuple[tuple[float, tuple[int, ...]], ...]
     batch: int | None = None
     scratch: str = "pingpong"
+    # scenario operands (coefficient field and/or domain mask): extra f32
+    # inputs windowed like the x slab (extent block + 2*steps*r, no leading
+    # axis — shared across the batch).  Each step multiplies the live
+    # accumulator by the static sub-slice at offset (s+1)*r per axis, so
+    # every intermediate state is scaled/masked exactly as a sequence of
+    # single steps would.
+    n_aux: int = 0
 
     @property
     def step_exts(self) -> tuple[tuple[int, ...], ...]:
@@ -359,7 +396,8 @@ def build_sweep_kernel_plan(spec: StencilSpec, cover: LineCover,
     return SweepKernelPlan(spec=spec, block=tuple(block), steps=int(steps),
                            band_lines=band_lines, point_taps=point_taps,
                            batch=None if batch is None else int(batch),
-                           scratch=check_scratch(scratch))
+                           scratch=check_scratch(scratch),
+                           n_aux=mx.n_aux_operands(spec))
 
 
 def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
@@ -375,11 +413,16 @@ def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
 
     lead = 0 if plan.batch is None else 1
 
+    r = spec.order
+
     def kernel(x_ref, *refs):
         n_t = sum(len(g) for g in step_groups)
-        t_refs, o_ref = refs[:n_t], refs[n_t]
-        bufs = refs[n_t + 1:]          # VMEM scratch (pair, or one "single")
+        t_refs = refs[:n_t]
+        aux_refs = refs[n_t:n_t + plan.n_aux]
+        o_ref = refs[n_t + plan.n_aux]
+        bufs = refs[n_t + plan.n_aux + 1:]  # VMEM scratch (pair, or "single")
         slab = x_ref[...]              # ([batch,] block + 2*steps*r per axis)
+        aux_slabs = [a[...] for a in aux_refs]  # (block + 2*steps*r per axis)
         pos = 0
         for s in range(steps):
             n_groups = len(step_groups[s])
@@ -388,6 +431,13 @@ def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
                 axis_ts=[t_refs[pos + g][...] for g in range(n_groups)],
                 axis_meta=groups_meta[s], point_taps=plan.point_taps)
             pos += n_groups
+            # scenario scale at EVERY step: step s's live extent sits at
+            # offset (s+1)*r per axis inside the aux slab; no leading axis,
+            # trailing-dim broadcast covers the batched acc
+            for a_slab in aux_slabs:
+                index = tuple(slice((s + 1) * r, (s + 1) * r + n)
+                              for n in exts[s])
+                acc = acc * a_slab[index]
             if s == steps - 1:
                 o_ref[...] = acc.astype(out_dtype)
             else:
@@ -404,7 +454,8 @@ def _make_sweep_kernel(plan: SweepKernelPlan, out_dtype,
 
 
 def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool = True,
+                      aux: Sequence[jnp.ndarray] = ()) -> jnp.ndarray:
     """Advance a haloed spatial array by ``plan.steps`` base steps in-kernel.
 
     ``x``: (S_0 + 2*T*r, ..., S_{d-1} + 2*T*r) haloed input; returns
@@ -414,12 +465,23 @@ def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
     ``plan.batch`` set, a leading batch axis precedes the spatial axes
     (the instance owns the B-state slab; scratch buffers batch alongside)
     and the per-step, per-axis contraction count is independent of B.
+
+    ``aux``: ``plan.n_aux`` SLAB-aligned f32 scenario operands (coefficient
+    field, then domain mask), each the same spatial shape as ``x`` (no
+    leading axis — shared across the batch) and windowed with the same
+    overlapping element window; the kernel re-reads the right sub-slice at
+    every step, so intermediates are scaled/masked per step (the paper's
+    banded-operand traffic tax for varying coefficients).
     """
     nd, r = plan.spec.ndim, plan.spec.order
     block, steps = plan.block, plan.steps
     w = steps * r
     out_shape, grid = _check_batched_input(x, plan, nd, w)
     lead = () if plan.batch is None else (plan.batch,)
+    if len(aux) != plan.n_aux:
+        raise ValueError(f"plan expects {plan.n_aux} aux operand(s), "
+                         f"got {len(aux)}")
+    slab_shape = tuple(s + 2 * w for s in out_shape)
 
     in_specs = [element_block_spec(
         lead + tuple(b + 2 * w for b in block),
@@ -432,6 +494,16 @@ def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
         for _axis, t, _fixeds in groups:
             t_inputs.append(jnp.asarray(t, jnp.float32))
             in_specs.append(_broadcast_spec(t))
+    aux_inputs = []
+    for a in aux:
+        if tuple(a.shape) != slab_shape:
+            raise ValueError(f"aux operand shape {a.shape} != haloed slab "
+                             f"shape {slab_shape}")
+        aux_inputs.append(jnp.asarray(a, jnp.float32))
+        in_specs.append(element_block_spec(
+            tuple(b + 2 * w for b in block),
+            lambda *ids: tuple(i * b for i, b in zip(ids, block)),
+        ))
 
     # slab scratch at the deepest intermediate extent: a ping-pong pair by
     # default, one buffer under scratch="single" (half the residency)
@@ -450,4 +522,4 @@ def sweep_pallas_call(x: jnp.ndarray, plan: SweepKernelPlan,
         out_shape=jax.ShapeDtypeStruct(lead + out_shape, x.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
-    )(x, *t_inputs)
+    )(x, *t_inputs, *aux_inputs)

@@ -22,6 +22,11 @@ enumerated candidate, best first — see ``ExecutionPlan.explain``):
     strat      temporal strategy: "operator" (one radius-T*r fused
                operator) | "inkernel" (T VMEM-resident base steps per
                Pallas kernel instance, flops linear in T)
+    coeff      coefficient kind of the spec: "const" | "vary" | "mask" |
+               "vary+mask" (constant across one plan's rows; varying/
+               masked rows carry the aux band-traffic tax and the masked
+               active-tile fraction, and illegal fused pairs are excluded
+               from the table — see the "fusion legality" line)
     cover      coefficient-line cover of the T-fused operator (of the
                BASE operator for inkernel rows — applied every step)
     backend    backend registry entry executing the update

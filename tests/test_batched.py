@@ -19,12 +19,12 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from parity import assert_sweep_parity, parity_grid
 from repro import api
 from repro.core import matrixization as mx
 from repro.core import stencil_spec as ss
 from repro.core.engine import StencilEngine
 from repro.kernels import ops
-from repro.kernels.ref import stencil_ref
 
 SUITE = ss.PAPER_SUITE()
 FAST_SPECS = ["box2d_r1", "star2d_r2", "diag2d_r1", "box3d_r1", "star3d_r1"]
@@ -39,28 +39,14 @@ def _engine_for(spec, boundary):
 
 
 def _grid_for(spec, steps=4):
-    # 'valid' shrinks 2*r per step, so high-order 3-D cells need headroom
-    n = 40 if spec.ndim == 2 else max(20, 2 * spec.order * steps + 4)
-    return (n,) * spec.ndim
+    return parity_grid(spec, steps)
 
 
 def _check_batched_parity(spec, boundary, batch, strategy, steps=4, fuse=2):
-    rng = np.random.default_rng(batch * 10 + steps)
-    grid = _grid_for(spec)
-    x = jnp.asarray(rng.normal(size=(batch,) + grid), jnp.float32)
-    eng = _engine_for(spec, boundary)
-    fn = eng.sweep_fn(steps, fuse=fuse, grid=grid, strategy=strategy)
-    out = fn(x)                    # batch folded into the kernel
-    ref = jax.vmap(fn)(x)          # per-state reference
-    np.testing.assert_array_equal(
-        np.asarray(out), np.asarray(ref),
-        err_msg=f"batched sweep not bit-exact vs vmap: {spec.describe()} "
-                f"{boundary} B={batch} {strategy}")
-    # and the evolution itself is right (oracle, not just self-consistent)
-    orc = x
-    for _ in range(steps):
-        orc = stencil_ref(orc, spec, boundary=boundary)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(orc), atol=1e-4)
+    # the shared harness does both bars: bit-exact vs jax.vmap of the same
+    # sweep closure, and atol=1e-4 vs the iterated gather oracle
+    assert_sweep_parity(spec, boundary, strategy, fuse, batch, steps=steps,
+                        seed=batch * 10 + steps)
 
 
 @pytest.mark.parametrize("strategy", STRATEGIES)

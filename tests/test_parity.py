@@ -1,0 +1,100 @@
+"""Randomized cross-strategy parity (ISSUE 8 acceptance gate).
+
+Tier-1 runs seeded random (spec, scenario, boundary, strategy, depth,
+batch) draws plus a deterministic varying+masked matrix through
+``parity.assert_sweep_parity``; the slow sweep (``make test-parity``)
+covers PAPER_SUITE x boundary x strategy for both new scenario kinds.
+Illegal fused pins are part of the matrix on purpose — the harness asserts
+the engine refuses them (fusion-legality regression, see tests/parity.py).
+"""
+import numpy as np
+import pytest
+
+from parity import (SCENARIOS, assert_sweep_parity, draw_scenario_spec,
+                    parity_grid, with_scenario)
+from prop import prop_cases
+from repro.core import stencil_spec as ss
+
+SUITE = ss.PAPER_SUITE()
+BOUNDARIES = ("valid", "zero", "periodic")
+STRATEGIES = ("operator", "inkernel")
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: randomized draws over the full parity space
+# ---------------------------------------------------------------------------
+
+@prop_cases(n=6, seed=8)
+def test_random_sweep_parity(draw):
+    spec, grid = draw_scenario_spec(draw)
+    boundary = draw.choice(BOUNDARIES)
+    strategy = draw.choice(("auto",) + STRATEGIES)
+    depth = draw.choice(("auto", 1, 2, 3))
+    batch = draw.choice((0, 3))
+    assert_sweep_parity(spec, boundary, strategy, depth, batch,
+                        grid=grid, seed=draw.int(0, 9999))
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: deterministic varying/masked matrix (the ISSUE-8 acceptance rows)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("kind", ("varying", "masked", "varying+masked"))
+def test_scenario_sweep_parity_2d(kind, boundary):
+    spec = SUITE["star2d_r1"]
+    grid = parity_grid(spec)
+    assert_sweep_parity(with_scenario(spec, grid, kind, seed=3), boundary,
+                        seed=11)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_scenario_pinned_strategies_periodic(strategy):
+    """Pinned depth-2 at periodic: inkernel runs (legal), operator must
+    refuse — never the constant-coefficient fused operator."""
+    spec = SUITE["box2d_r1"]
+    grid = parity_grid(spec)
+    out = assert_sweep_parity(with_scenario(spec, grid, "varying", seed=7),
+                              "periodic", strategy, 2, seed=13)
+    assert (out is not None) == (strategy == "inkernel")
+
+
+def test_scenario_sweep_parity_3d():
+    spec = SUITE["star3d_r1"]
+    grid = parity_grid(spec)
+    assert_sweep_parity(with_scenario(spec, grid, "varying+masked", seed=5),
+                        "periodic", batch=2, seed=17)
+
+
+def test_constant_scenario_reduces_to_base_band_path():
+    """An all-ones field + all-active mask must be BIT-identical to the
+    plain constant-coefficient band path (same kernels, unit aux)."""
+    import jax.numpy as jnp
+    spec = SUITE["star2d_r2"]
+    grid = parity_grid(spec)
+    unit = spec.with_field(np.ones(grid), domain_mask=np.ones(grid, bool))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=grid), jnp.float32)
+    base = assert_sweep_parity(spec, "periodic", seed=0)
+    scen = assert_sweep_parity(unit, "periodic", seed=0)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(scen))
+
+
+# ---------------------------------------------------------------------------
+# Slow: PAPER_SUITE x boundary x strategy (make test-parity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("name", sorted(SUITE))
+def test_paper_suite_scenario_parity(name, boundary, strategy):
+    spec = SUITE[name]
+    grid = parity_grid(spec)
+    for kind in ("varying", "masked"):
+        scen = with_scenario(spec, grid, kind, seed=29)
+        # depth-2 pin: the harness asserts a refusal where the pair is
+        # illegal (operator always; inkernel at 'zero') and parity where
+        # it is legal — both sides of the legality rule, every cell.
+        assert_sweep_parity(scen, boundary, strategy, 2, seed=31)
+        assert_sweep_parity(scen, boundary, seed=31)  # auto always runs

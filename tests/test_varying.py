@@ -1,0 +1,258 @@
+"""Varying-coefficient & masked-domain specs as plan dimensions (ISSUE 8).
+
+The scenario-specific regressions the parity sweep does not pin down
+directly: spec construction/validation, the fusion-legality rule at every
+layer (``temporal.fuse_steps``, ``choose_fuse_depth``, the engine's pin
+check, the planner's candidate table), cache identity by field/mask
+CONTENT, plan serialization round-trips, aux-band pricing, and the
+backend gates (separable/codegen are constant-dense only).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import matrixization as mx
+from repro.core import stencil_spec as ss
+from repro.core import temporal
+from repro.core.engine import StencilEngine
+from repro.core.plan_cache import cache_key
+from repro.core.time_stepper import reference_evolve
+
+GRID = (32, 32)
+SPEC = ss.star(2, 1, seed=0)
+FIELD = ss.random_coeff_field(GRID, seed=1)
+MASK = ss.random_domain_mask(GRID, seed=2)
+VARY = SPEC.with_field(FIELD)
+MASKED = SPEC.with_mask(MASK)
+BOTH = SPEC.with_field(FIELD, domain_mask=MASK)
+
+
+# ---------------------------------------------------------------------------
+# Spec construction & identity
+# ---------------------------------------------------------------------------
+
+def test_scenario_spec_flags_and_describe():
+    assert SPEC.is_constant_dense and not SPEC.is_varying
+    assert VARY.is_varying and not VARY.is_masked
+    assert MASKED.is_masked and not MASKED.is_varying
+    assert BOTH.is_varying and BOTH.is_masked
+    assert not BOTH.is_constant_dense
+    assert BOTH.describe().endswith("[varying+masked]")
+    assert VARY.describe().endswith("[varying]")
+    assert MASKED.describe().endswith("[masked]")
+    assert BOTH.base().is_constant_dense
+    np.testing.assert_array_equal(BOTH.base().gather_coeffs,
+                                  SPEC.gather_coeffs)
+
+
+def test_scenario_digest_is_content_addressed():
+    assert SPEC.scenario_digest() == ""
+    a = SPEC.with_field(FIELD).scenario_digest()
+    assert a and a == SPEC.with_field(FIELD.copy()).scenario_digest()
+    other = ss.random_coeff_field(GRID, seed=9)
+    assert SPEC.with_field(other).scenario_digest() != a
+    assert MASKED.scenario_digest() not in ("", a)
+    assert BOTH.scenario_digest() not in (a, MASKED.scenario_digest())
+
+
+def test_problem_validates_scenario_field_shapes():
+    with pytest.raises(ValueError, match="problem grid"):
+        api.StencilProblem(VARY, (48, 48), boundary="periodic", steps=2)
+    with pytest.raises(ValueError, match="problem grid"):
+        api.StencilProblem(MASKED, (48, 48), boundary="periodic", steps=2)
+    api.StencilProblem(VARY, GRID, boundary="periodic", steps=2)  # fits
+
+
+def test_mesh_planning_rejects_scenario_specs():
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("gx", "gy"))
+    with pytest.raises(ValueError, match="mesh"):
+        api.StencilProblem(VARY, GRID, boundary="periodic", steps=2,
+                           mesh=mesh, grid_axes=("gx", "gy"))
+
+
+# ---------------------------------------------------------------------------
+# Fusion legality — every layer refuses the inexact compose
+# ---------------------------------------------------------------------------
+
+def test_fusion_legal_truth_table():
+    for s in ("operator", "inkernel"):
+        for b in ("valid", "zero", "periodic"):
+            assert temporal.fusion_legal(BOTH, b, s, 1)     # depth 1 free
+            assert temporal.fusion_legal(SPEC, b, s, 4)     # constant free
+    assert not temporal.fusion_legal(VARY, "periodic", "operator", 2)
+    assert not temporal.fusion_legal(MASKED, "valid", "operator", 3)
+    assert temporal.fusion_legal(VARY, "periodic", "inkernel", 3)
+    assert temporal.fusion_legal(BOTH, "valid", "inkernel", 2)
+    assert not temporal.fusion_legal(BOTH, "zero", "inkernel", 2)
+
+
+def test_fuse_steps_refuses_scenario_specs():
+    assert temporal.fuse_steps(VARY, 1) is VARY
+    for spec in (VARY, MASKED, BOTH):
+        with pytest.raises(ValueError, match="not exact"):
+            temporal.fuse_steps(spec, 2)
+
+
+def test_choose_fuse_depth_falls_back_per_boundary():
+    kw = dict(block=(16, 16), max_depth=4,
+              strategies=("operator", "inkernel"))
+    dec = temporal.choose_fuse_depth(VARY, 8, boundary="periodic", **kw)
+    assert dec.strategy == "inkernel" and dec.depth > 1  # deep path legal
+    dec = temporal.choose_fuse_depth(VARY, 8, boundary="zero", **kw)
+    assert dec.depth == 1                    # nothing fused is legal
+    dec = temporal.choose_fuse_depth(VARY, 8, block=(16, 16), max_depth=4,
+                                     strategies=("operator",),
+                                     boundary="periodic")
+    assert dec.depth == 1                    # operator-only: depth capped
+
+
+def test_engine_sweep_refuses_illegal_pins():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=GRID), jnp.float32)
+    for boundary, strategy in (("periodic", "operator"),
+                               ("zero", "inkernel")):
+        eng = StencilEngine(VARY, backend="pallas", block=(16, 16),
+                            boundary=boundary)
+        with pytest.raises(ValueError, match="not exact"):
+            eng.sweep(x, 4, fuse=2, strategy=strategy)
+
+
+def test_engine_auto_resolves_to_legal_fallback():
+    eng = StencilEngine(BOTH, backend="pallas", block=(16, 16),
+                        boundary="zero")
+    depth, strategy = eng._resolve(6, "auto", "auto", GRID)
+    assert depth == 1                        # zero boundary: depth-1 only
+    eng = StencilEngine(BOTH, backend="pallas", block=(16, 16),
+                        boundary="periodic")
+    depth, strategy = eng._resolve(6, 3, "auto", GRID)
+    assert (depth, strategy) == (3, "inkernel")  # never the fused operator
+
+
+def test_planner_never_emits_illegal_candidates():
+    for boundary in ("zero", "periodic"):
+        prob = api.StencilProblem(BOTH, GRID, boundary=boundary, steps=8)
+        p = api.plan(prob, max_depth=4)
+        assert p.candidates
+        for c in p.candidates:
+            assert temporal.fusion_legal(BOTH, boundary, c.strategy,
+                                         c.depth), (c.strategy, c.depth)
+        if boundary == "zero":
+            assert all(c.depth == 1 for c in p.candidates)
+        else:
+            assert any(c.depth > 1 and c.strategy == "inkernel"
+                       for c in p.candidates)
+        assert "fusion legality" in p.explain()
+        assert "vary+mask" in p.explain()
+
+
+def test_planner_compiled_scenario_plan_matches_oracle():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=GRID), jnp.float32)
+    for boundary in ("zero", "periodic"):
+        prob = api.StencilProblem(BOTH, GRID, boundary=boundary, steps=6)
+        run = api.compile(api.plan(prob, backends=["pallas"],
+                                   block=(16, 16)))
+        ref = reference_evolve(BOTH, x, 6, boundary)
+        np.testing.assert_allclose(np.asarray(run(x)), np.asarray(ref),
+                                   atol=1e-4, err_msg=boundary)
+
+
+# ---------------------------------------------------------------------------
+# Pricing: aux band traffic + masked active fraction
+# ---------------------------------------------------------------------------
+
+def test_aux_pricing_helpers():
+    assert mx.n_aux_operands(SPEC) == 0
+    assert mx.n_aux_operands(VARY) == 1 == mx.n_aux_operands(MASKED)
+    assert mx.n_aux_operands(BOTH) == 2
+    block, w = (16, 16), 2
+    per_aux = 4 * (16 + 2 * w) ** 2
+    assert mx.aux_hbm_bytes(block, w, 2) == 2 * per_aux
+    assert mx.aux_hbm_bytes(block, w, 0) == 0
+    frac = mx.active_block_fraction(MASK, block)
+    assert 0.0 < frac <= 1.0
+    assert mx.active_block_fraction(None, block) == 1.0
+    assert mx.active_block_fraction(np.zeros(GRID, bool), block) == 0.0
+
+
+def test_varying_costs_at_least_constant():
+    """The aux band is pure extra traffic: a varying spec can never be
+    modelled cheaper than its constant base at the same problem."""
+    kw = dict(boundary="periodic", steps=8)
+    base = api.plan(api.StencilProblem(SPEC, GRID, **kw)).chosen()
+    vary = api.plan(api.StencilProblem(VARY, GRID, **kw)).chosen()
+    assert vary.t_per_step >= base.t_per_step
+
+
+# ---------------------------------------------------------------------------
+# Serialization & cache identity
+# ---------------------------------------------------------------------------
+
+def test_scenario_plan_round_trips_through_json():
+    prob = api.StencilProblem(BOTH, GRID, boundary="periodic", steps=6)
+    p = api.plan(prob)
+    q = api.ExecutionPlan.from_json(p.to_json())
+    assert q == p
+    spec = q.spec
+    assert spec.is_varying and spec.is_masked
+    np.testing.assert_allclose(spec.coeff_field, FIELD)
+    np.testing.assert_array_equal(spec.domain_mask, MASK)
+
+
+def test_cache_key_separates_scenarios_by_content():
+    def key(spec):
+        return cache_key(api.StencilProblem(spec, GRID, boundary="periodic",
+                                            steps=3))
+    base = key(SPEC)
+    field_a = key(SPEC.with_field(FIELD))
+    field_b = key(SPEC.with_field(ss.random_coeff_field(GRID, seed=9)))
+    masked = key(SPEC.with_mask(MASK))
+    assert len({base, field_a, field_b, masked}) == 4
+    # content-addressed: an equal COPY of the field hits the same entry
+    assert key(SPEC.with_field(FIELD.copy())) == field_a
+
+
+# ---------------------------------------------------------------------------
+# Backend gates
+# ---------------------------------------------------------------------------
+
+def test_separable_and_codegen_are_constant_dense_only():
+    for backend in ("separable", "codegen"):
+        with pytest.raises(ValueError, match="does not support"):
+            StencilEngine(ss.box(2, 1).with_field(FIELD), backend=backend,
+                          block=(16, 16), boundary="periodic")
+    # the gate keys on the spec KIND, not the backend generally
+    StencilEngine(ss.box(2, 1), backend="codegen", block=(16, 16),
+                  boundary="periodic")
+
+
+# ---------------------------------------------------------------------------
+# Bench gate
+# ---------------------------------------------------------------------------
+
+def test_bench_varying_smoke_within_budget():
+    """The benchmark's tier-1 gate: scenario pricing coherent on >= 4
+    PAPER_SUITE variants (varying tax >= 1, skippable masked tiles,
+    no illegal fused pairs), inside a wall-clock budget — the model-only
+    path must stay cheap enough to gate every PR."""
+    import os
+    import subprocess
+    import sys
+    import time
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    t0 = time.perf_counter()
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "benchmarks",
+                                      "bench_varying.py"), "--smoke"],
+        capture_output=True, text=True, env=env, timeout=600)
+    elapsed = time.perf_counter() - t0
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SMOKE PASS" in out.stdout
+    assert elapsed < 120.0, f"bench_varying --smoke took {elapsed:.0f}s"
