@@ -1,7 +1,7 @@
 # Canonical test entry points (see ROADMAP "Tier-1 verify").
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-slow test-parity bench-temporal bench-smoke plan-report docs-check
+.PHONY: test test-all test-slow test-parity test-chaos bench-temporal bench-smoke plan-report docs-check
 
 # tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
 test:
@@ -20,6 +20,12 @@ test-slow:
 test-parity:
 	$(PY) -m pytest tests/test_parity.py tests/test_batched.py -q -m ""
 
+# the full seeded fault-injection suite, slow fault-matrix sweep
+# included (site x rate x seed, recovery bit-exact every time); the
+# tier-1 gate already runs the fast scenarios + one smoke case
+test-chaos:
+	$(PY) -m pytest tests/test_chaos.py -q -m ""
+
 bench-temporal:
 	$(PY) benchmarks/bench_temporal.py
 
@@ -28,8 +34,10 @@ bench-temporal:
 # BENCH_temporal.json (fused-sweep wall-clock vs model),
 # BENCH_serve.json (batched per-state cost vs B + serving-loop
 # throughput), BENCH_rollout.json (fused segment programs vs
-# step-by-step) and BENCH_varying.json (varying/masked scenario traffic
-# tax + masked skip fractions) — run once per PR so the repo records how
+# step-by-step), BENCH_varying.json (varying/masked scenario traffic
+# tax + masked skip fractions) and BENCH_chaos.json (recovered
+# throughput + tail latency under seeded fault rates, sync vs
+# background-stepper mode) — run once per PR so the repo records how
 # the cost model and decisions drift over time.
 bench-smoke:
 	$(PY) benchmarks/bench_plan.py --json
@@ -37,6 +45,7 @@ bench-smoke:
 	$(PY) benchmarks/bench_serve.py --json
 	$(PY) benchmarks/bench_rollout.py --json
 	$(PY) benchmarks/bench_varying.py --json
+	$(PY) benchmarks/bench_chaos.py --json
 
 # planner decision record for the PAPER_SUITE on TPU_V5E; the tier-1 golden
 # test (tests/test_plan_golden.py) diffs this output against

@@ -1,0 +1,192 @@
+"""Chaos serving benchmark: recovered throughput and tail latency under
+seeded fault injection, sync-loop vs background-stepper mode.
+
+For each fault rate in RATES a seeded :class:`repro.api.FaultPlan`
+injects ``serve.settle`` faults (the deferred-device-error shape under
+JAX async dispatch) into a warm serving pass, and the benchmark records
+what the retry ladder COSTS: warm whole-stream wall clock, recovered
+throughput (states/s — every request still completes, bit-exact), p50/
+p95 submit->result latency, and the fault counters (injected faults,
+bucket failures, retries).  Rate 0.0 is the fault-free reference row, so
+``degradation_x`` is directly the chaos tax.
+
+Each rate runs in BOTH serving modes: ``sync`` (the caller drives
+``serve()`` — flush loop steps inline) and ``background`` (the
+scheduler runs on the server's stepper thread; the caller submits and
+blocks on ``results(ticket, timeout_s=...)``) — the two concurrency
+stories the runtime supports.  The retry backoff is deliberately small
+(5 ms base) so the benchmark measures scheduling overhead, not sleeps.
+
+    PYTHONPATH=src python benchmarks/bench_chaos.py --json [--out BENCH_chaos.json]
+    PYTHONPATH=src python benchmarks/bench_chaos.py          # readable table
+    PYTHONPATH=src python benchmarks/bench_chaos.py --smoke  # tier-1 gate
+
+``make bench-smoke`` runs the ``--json`` form so every PR leaves a
+diffable recovery-cost trajectory point in ``BENCH_chaos.json``.
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro import api
+
+BENCH_VERSION = 1
+
+CELL = "box2d_r1"
+GRID = (48, 48)
+STEPS = 4
+REQUESTS = 16
+MAX_BATCH = 4
+RATES = (0.0, 0.2, 0.4)
+SEED = 0
+
+
+def _server():
+    return api.StencilServer(
+        api.PAPER_SUITE()[CELL], STEPS, max_batch=MAX_BATCH,
+        backends=["jnp"],
+        restart=api.RestartPolicy(max_failures=25, backoff_s=0.005))
+
+
+def _plan(rate):
+    plan = api.FaultPlan(seed=SEED)
+    if rate > 0:
+        # the pinned first-call fault guarantees every faulted row
+        # exercises the retry ladder at least once, independent of
+        # thread interleaving; the rate rule layers seeded pressure
+        plan.rule("serve.settle", at=(0,))
+        plan.rule("serve.settle", rate=rate)
+    return plan
+
+
+def _run_sync(server, states, rate):
+    with _plan(rate) as plan:
+        t0 = time.perf_counter()
+        outs = server.serve(states)
+        wall = time.perf_counter() - t0
+    return outs, wall, plan
+
+
+def _run_background(server, states, rate):
+    server.start()
+    try:
+        with _plan(rate) as plan:
+            t0 = time.perf_counter()
+            tickets = [server.submit(s) for s in states]
+            outs = [server.results(t, timeout_s=300.0) for t in tickets]
+            wall = time.perf_counter() - t0
+    finally:
+        server.stop()
+    return outs, wall, plan
+
+
+def measure(rates=RATES, requests=REQUESTS):
+    """One warm measured pass per (mode, rate); every row's results are
+    checked bit-identical to the fault-free sync baseline."""
+    rng = np.random.default_rng(3)
+    states = [rng.normal(size=GRID).astype(np.float32)
+              for _ in range(requests)]
+    baseline = None
+    out = {}
+    for mode, runner in (("sync", _run_sync),
+                         ("background", _run_background)):
+        rows = {}
+        for rate in rates:
+            server = _server()
+            # cold: plans + compiles — every bucket size the background
+            # stepper's trickle admission can form (4, 2, 1), so no jit
+            # compile pollutes the measured pass
+            server.serve(states)
+            server.serve(states[:2])
+            server.serve(states[:1])
+            server.reset_stats()
+            outs, wall, plan = runner(server, states, rate)
+            arr = [np.asarray(o) for o in outs]
+            if baseline is None:
+                baseline = arr             # sync rate-0 reference
+            for a, b in zip(arr, baseline):
+                np.testing.assert_array_equal(a, b)   # recovery is exact
+            s = server.stats()
+            rows[f"{rate:g}"] = {
+                "wall_ms": wall * 1e3,
+                "throughput_states_per_s": requests / wall,
+                "p50_latency_ms": s["latency"]["p50_s"] * 1e3,
+                "p95_latency_ms": s["latency"]["p95_s"] * 1e3,
+                "injected": plan.fired(),
+                "bucket_failures": s["faults"]["bucket_failures"],
+                "retries": s["faults"]["retries"],
+            }
+        ref = rows[f"{rates[0]:g}"]["wall_ms"]
+        for row in rows.values():
+            row["degradation_x"] = row["wall_ms"] / ref
+        out[mode] = rows
+    return out
+
+
+def emit_json(path="BENCH_chaos.json"):
+    data = {
+        "bench_version": BENCH_VERSION,
+        "cell": CELL, "grid": list(GRID), "steps": STEPS,
+        "requests": REQUESTS, "max_batch": MAX_BATCH,
+        "fault_site": "serve.settle", "seed": SEED,
+        "rates": [f"{r:g}" for r in RATES],
+        "measured": measure(),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    m = data["measured"]
+    worst = max(r["degradation_x"] for rows in m.values()
+                for r in rows.values())
+    print(f"wrote {path}: {len(RATES)} fault rates x "
+          f"{len(m)} modes, all recoveries bit-exact; worst-case "
+          f"chaos tax {worst:.2f}x wall clock")
+    return data
+
+
+def table():
+    print("mode,rate,wall_ms,states_per_s,p95_ms,injected,retries,"
+          "degradation_x")
+    for mode, rows in measure().items():
+        for rate, r in rows.items():
+            print(f"{mode},{rate},{r['wall_ms']:.1f},"
+                  f"{r['throughput_states_per_s']:.1f},"
+                  f"{r['p95_latency_ms']:.2f},{r['injected']},"
+                  f"{r['retries']},{r['degradation_x']:.2f}")
+
+
+def smoke():
+    """Tiny tier-1 pass: one faulted rate per mode, recovery bit-exact."""
+    m = measure(rates=(0.0, 0.3), requests=6)
+    for mode in ("sync", "background"):
+        faulted = m[mode]["0.3"]
+        assert faulted["injected"] > 0, m
+        assert faulted["retries"] == faulted["bucket_failures"], m
+        print(f"{mode}: rate 0.3 -> {faulted['injected']} faults, "
+              f"{faulted['retries']} retries, "
+              f"{faulted['throughput_states_per_s']:.1f} states/s "
+              f"(tax {faulted['degradation_x']:.2f}x), all bit-exact")
+    print("bench-chaos smoke OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable BENCH_chaos.json")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny faulted pass per mode (the tier-1 gate)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    if args.json:
+        emit_json(args.out)
+        return
+    table()
+
+
+if __name__ == "__main__":
+    main()

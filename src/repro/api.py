@@ -53,6 +53,17 @@ checkpointable executable:
     rplan = api.plan_program(program)     # per-segment fuse decisions
     result = api.compile_program(rplan).run(x)   # final + emitted states
     api.run_checkpointed(...)             # restartable, bit-exact resume
+
+Robustness (README §Chaos, DESIGN.md §Robustness): the supervision
+primitives (:class:`RestartPolicy`, :class:`HeartbeatMonitor`,
+:func:`supervised`) drive both the serving scheduler's per-group retry
+budgets and the checkpointed rollout driver, and a seeded
+:class:`FaultPlan` injects deterministic failures at named sites to
+prove recovery end to end:
+
+    plan = api.FaultPlan(seed=0).rule("serve.settle", rate=0.3)
+    with plan:                            # every result still bit-exact
+        outs = server.serve(states)
 """
 from __future__ import annotations
 
@@ -70,11 +81,15 @@ from repro.core.stencil_spec import (PAPER_SUITE, StencilSpec, box, diagonal,
                                      random_domain_mask, star)
 from repro.launch.calibrate import (CalibrationRecord, CandidateMeasurement,
                                     calibrate, measure_candidate)
-from repro.launch.serve_stencil import ServeStats, StencilServer
+from repro.launch.serve_stencil import (RequestShed, ServeStats,
+                                        StencilServer)
 from repro.rollout import (CompiledRollout, RolloutPlan, RolloutProgram,
                            RolloutResult, Segment, UpdateOp, compile_program,
                            plan_program, register_update_op, run_checkpointed,
                            update_op_names)
+from repro.runtime.chaos import FAULT_SITES, FaultError, FaultPlan, FaultRule
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, RestartPolicy,
+                                           StepTimeout, supervised)
 
 compile = compile_plan  # noqa: A001 - the facade verb (shadows the builtin
 #                         inside this namespace only, by design)
@@ -87,7 +102,9 @@ __all__ = [
     "CalibrationRecord", "CandidateMeasurement", "calibrate",
     "measure_candidate",
     "PlanCache", "CachedExecutable", "cache_key",
-    "StencilServer", "ServeStats",
+    "StencilServer", "ServeStats", "RequestShed",
+    "FaultPlan", "FaultRule", "FaultError", "FAULT_SITES",
+    "RestartPolicy", "HeartbeatMonitor", "StepTimeout", "supervised",
     "RolloutProgram", "Segment", "UpdateOp", "RolloutPlan", "RolloutResult",
     "CompiledRollout", "plan_program", "compile_program", "run_checkpointed",
     "register_update_op", "update_op_names",

@@ -27,8 +27,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import chaos
+
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "retained_steps", "CheckpointManager"]
 
 
 def _tree_paths(tree):
@@ -75,20 +77,36 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     for fname, blob in shard_blobs.items():
         np.savez(os.path.join(tmp, fname + ".npz"),
                  **{k.replace("/", "__"): v for k, v in blob.items()})
-    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+    mpath = os.path.join(tmp, "manifest.msgpack")
+    with open(mpath, "wb") as f:
         f.write(msgpack.packb(manifest))
+    # fault site: "raise" models a crash mid-write (the .tmp is left
+    # behind — invisible to latest_step/GC); "corrupt" models a TORN
+    # write that still completed the rename (truncated manifest), the
+    # case the resume fallback must skip over
+    if chaos.fire("checkpoint.write", step=int(step)) == "corrupt":
+        with open(mpath, "rb") as f:
+            half = f.read()[: max(1, os.path.getsize(mpath) // 2)]
+        with open(mpath, "wb") as f:
+            f.write(half)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def retained_steps(directory: str) -> list[int]:
+    """Every COMPLETED checkpoint step in ``directory``, ascending
+    (in-flight ``.tmp`` directories are invisible here, as everywhere)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(directory)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = retained_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(directory: str, step: int, target_tree: Any,
@@ -96,6 +114,7 @@ def restore_checkpoint(directory: str, step: int, target_tree: Any,
     """Rebuild the tree saved at ``step``, re-sharded like ``shardings``
     (or replicated/default when None). ``target_tree`` supplies structure."""
     path = os.path.join(directory, f"step_{step:08d}")
+    chaos.fire("checkpoint.read", step=int(step))
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     blobs: dict[str, Any] = {}
@@ -201,3 +220,9 @@ class CheckpointManager:
 
     def latest(self) -> Optional[int]:
         return latest_step(self.directory)
+
+    def steps(self) -> list[int]:
+        """All retained completed checkpoint steps, ascending — the
+        fallback ladder a digest-guarded resume walks newest-first when
+        the latest checkpoint turns out torn/corrupt."""
+        return retained_steps(self.directory)

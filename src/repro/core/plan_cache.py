@@ -38,6 +38,7 @@ import jax
 from repro.core.planner import (CompiledStencil, ExecutionPlan, PLAN_VERSION,
                                 StencilProblem, _calibration_dict,
                                 compile_plan, max_profitable_batch, plan)
+from repro.runtime import chaos
 
 __all__ = ["PlanCache", "CachedExecutable", "cache_key"]
 
@@ -313,6 +314,10 @@ class PlanCache:
         if p is None:
             p = plan(problem, self._hw, calibration=calibration,
                      **plan_kwargs)
+        # fault site: an injected compile failure leaves no cache entry
+        # behind (the miss was already counted — honest accounting)
+        chaos.fire("cache.compile", backend=p.backend,
+                   batch=int(problem.batch))
         compiled = compile_plan(p, mesh=mesh, interpret=self._interpret)
         # distributed steppers are already jitted; jit single-device fns
         # here so a repeated request cannot re-trace either
@@ -355,6 +360,9 @@ class PlanCache:
         self.misses += 1
         rplan = plan_program(program, self._hw, cache=self,
                              calibration=calibration, **plan_kwargs)
+        chaos.fire("cache.compile",
+                   backend=rplan.segment_plans[0].backend,
+                   batch=int(program.problem.batch))
         compiled = compile_program(rplan, interpret=self._interpret)
 
         def fn(x):

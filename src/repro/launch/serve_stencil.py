@@ -51,6 +51,37 @@ throughput counters — p50/p95/mean in ``stats()["latency"]`` — and
 round-robin across devices, each with its own :class:`PlanCache`, and
 reports a per-device column.
 
+**Fault handling** (DESIGN.md §Robustness) is a graded ladder, driven
+by the shared supervision primitives in
+:mod:`repro.runtime.fault_tolerance` and exercisable deterministically
+through :mod:`repro.runtime.chaos`:
+
+  retry      a failed bucket requeues under a per-shape-group
+             :class:`RestartPolicy` clone — exponential backoff, bounded
+             budget — instead of a bare requeue; its executable stays
+             cold (success accounting sits after readiness).
+  fallback   a shape group whose kernel faults persist degrades to the
+             ``fallback_backends`` pin (the jnp matrixized reference by
+             default) through the normal ``register_backend`` registry;
+             results stay BIT-exact and ``stats()["degraded"]`` records
+             the mode.
+  evict      a device failing ``evict_after`` consecutive buckets leaves
+             the round-robin rotation; its sticky shape groups remap to
+             surviving devices.  After ``evict_cooldown_s`` it rejoins
+             on probation (one strike re-evicts with doubled cooldown)
+             and takes one remapped group back as the probe.
+  shed       when the deadline-miss rate over the last ``shed_window``
+             deadline-carrying requests crosses ``shed_miss_rate``, the
+             lowest-priority class of PENDING requests is shed (their
+             tickets fail with :class:`RequestShed`).
+
+**Concurrency**: every public method is thread-safe (one state lock
+guards the queues, one step lock serializes scheduler turns; device
+waits happen OUTSIDE the state lock so ``submit()``/``results()`` never
+block on a sweep).  ``start()`` runs the scheduler on a background
+thread so interactive callers never call ``step()`` at all;
+``results(ticket, timeout_s=...)`` then blocks until the ticket settles.
+
     PYTHONPATH=src python -m repro.launch.serve_stencil --cell star2d_r2 \
         --requests 24 --steps 4 --max-batch 8
 """
@@ -58,7 +89,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
+from collections import deque
 from typing import Sequence
 
 import numpy as np
@@ -70,8 +103,15 @@ from repro.core.plan_cache import PlanCache
 from repro.core.planner import StencilProblem
 from repro.core.stencil_spec import PAPER_SUITE, StencilSpec
 from repro.rollout.program import RolloutProgram, Segment, as_segments
+from repro.runtime import chaos
+from repro.runtime.fault_tolerance import RestartPolicy
 
-__all__ = ["StencilServer", "ServeStats"]
+__all__ = ["StencilServer", "ServeStats", "RequestShed"]
+
+
+class RequestShed(RuntimeError):
+    """A pending request shed under deadline pressure; claiming its
+    ticket raises this (the state was never advanced)."""
 
 
 def _bucket(n: int, max_batch: int) -> int:
@@ -86,7 +126,7 @@ def _shape_str(shape: tuple[int, ...]) -> str:
     return "x".join(str(n) for n in shape)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _RolloutTask:
     """Scheduler-side progress of one submitted rollout: which segment
     runs next, how many steps completed, and the emitted intermediates
@@ -112,7 +152,7 @@ class _RolloutTask:
         return (s.steps, s.update.update_id if s.update else "", s.emit)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Request:
     """One submitted state awaiting its bucket."""
     ticket: int
@@ -120,9 +160,10 @@ class _Request:
     submit_t: float
     deadline_s: float | None = None
     rollout: _RolloutTask | None = None
+    priority: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _InFlight:
     """One dispatched-but-unsettled bucket (its device work may still be
     running; ``out`` is the unrealized result)."""
@@ -156,6 +197,13 @@ class ServeStats:
     (the queue + batching + device time a caller actually waits);
     ``deadline_misses`` counts requests whose latency exceeded the
     ``deadline_s`` they were submitted with.
+
+    Fault-ladder counters: ``bucket_failures`` (dispatch or settle
+    failures, including injected ones), ``retries`` (failed buckets
+    requeued under a retry budget), ``fallbacks`` (shape groups degraded
+    to the fallback backend), ``evictions`` (devices removed from the
+    rotation) and ``shed`` (pending requests dropped under deadline
+    pressure).
     """
 
     requests: int = 0
@@ -165,6 +213,11 @@ class ServeStats:
     warm_states: int = 0         # states served by warm executables
     compile_wall_s: float = 0.0  # first-call (trace+compile+sweep) seconds
     deadline_misses: int = 0
+    bucket_failures: int = 0
+    retries: int = 0
+    fallbacks: int = 0
+    evictions: int = 0
+    shed: int = 0
     latencies_s: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
@@ -199,14 +252,17 @@ class StencilServer:
     ``steps``, ``boundary``, ``dtype``) and serves any stream of states
     of any spatial shape matching ``spec.ndim``:
 
-      * ``submit(state, deadline_s=...)`` enqueues a state, returns a
-        ticket;
+      * ``submit(state, deadline_s=..., priority=...)`` enqueues a
+        state, returns a ticket;
       * ``step()`` runs one scheduler turn — admit every pending request
         into freshly dispatched buckets, then settle the buckets
         dispatched on EARLIER turns (so dispatch of this turn's work
         overlaps the device finishing the last turn's);
-      * ``results(ticket)`` claims one settled result; ``ready(ticket)``
-        peeks;
+      * ``start()`` / ``stop()`` run those turns on a background thread
+        instead, making ``submit()`` fire-and-forget;
+      * ``results(ticket)`` claims one settled result (``timeout_s=``
+        blocks until it settles — the background-stepper accessor);
+        ``ready(ticket)`` peeks;
       * ``flush()`` steps until nothing is pending or in flight and
         returns every unclaimed ``{ticket: result}``;
       * ``serve(states)`` is the submit-all-then-flush convenience,
@@ -220,6 +276,15 @@ class StencilServer:
     server: shape groups route round-robin, one ``PlanCache`` per
     device.
 
+    Fault handling (module docstring; DESIGN.md §Robustness):
+    ``restart`` is the per-shape-group retry-budget TEMPLATE (cloned per
+    group; ``None`` gives the default 3-strike/50 ms-backoff policy),
+    ``fallback_after``/``fallback_backends`` configure the persistent-
+    kernel-fault backend degradation (``fallback_after=None`` disables),
+    ``evict_after``/``evict_cooldown_s`` the device eviction ladder, and
+    ``shed_miss_rate``/``shed_window`` the load shedder (``None``
+    disables — the default).
+
     The plan/executable cache is injectable so several servers (or a
     server plus ad-hoc callers) can share one; by default each server
     owns a fresh :class:`PlanCache` (per device).
@@ -232,11 +297,21 @@ class StencilServer:
                  interpret: bool = True, hw=None,
                  async_dispatch: bool = True,
                  admission: bool = True, admission_rtol: float = 0.0,
-                 devices: Sequence | None = None):
+                 devices: Sequence | None = None,
+                 restart: RestartPolicy | None = None,
+                 fallback_after: int | None = 2,
+                 fallback_backends: Sequence[str] = ("jnp",),
+                 evict_after: int = 3, evict_cooldown_s: float = 2.0,
+                 shed_miss_rate: float | None = None,
+                 shed_window: int = 16):
         if steps < 0:
             raise ValueError("steps >= 0")
         if max_batch < 1:
             raise ValueError("max_batch >= 1")
+        if evict_after < 1:
+            raise ValueError("evict_after >= 1")
+        if shed_miss_rate is not None and not 0.0 <= shed_miss_rate <= 1.0:
+            raise ValueError("shed_miss_rate in [0, 1]")
         self.spec = spec
         self.steps = int(steps)
         self.boundary = boundary
@@ -246,6 +321,14 @@ class StencilServer:
         self.async_dispatch = bool(async_dispatch)
         self.admission = bool(admission)
         self.admission_rtol = float(admission_rtol)
+        self.restart = restart if restart is not None else RestartPolicy(
+            max_failures=3, backoff_s=0.05)
+        self.fallback_after = fallback_after
+        self.fallback_backends = list(fallback_backends)
+        self.evict_after = int(evict_after)
+        self.evict_cooldown_s = float(evict_cooldown_s)
+        self.shed_miss_rate = shed_miss_rate
+        self.shed_window = int(shed_window)
         if devices is not None and not list(devices):
             raise ValueError("devices must be non-empty when given")
         self._devices = list(devices) if devices is not None else [None]
@@ -263,36 +346,67 @@ class StencilServer:
         self._inflight: list[_InFlight] = []
         self._rollouts: dict[int, _RolloutTask] = {}
         self._done: dict[int, jnp.ndarray] = {}
+        self._failed: dict[int, Exception] = {}
+        self._cancelled: set[int] = set()
         self._next_ticket = 0
         self._caps: dict[tuple[int, ...], int] = {}
         self._group_dev: dict[tuple[int, ...], int] = {}
+        self._rr = 0                    # round-robin cursor (active devices)
+        # degradation-ladder state -----------------------------------------
+        self._retry: dict[tuple[int, ...], RestartPolicy] = {}
+        self._group_failures: dict[tuple[int, ...], int] = {}
+        self._group_backends: dict[tuple[int, ...], list[str]] = {}
+        n_dev = len(self._devices)
+        self._dev_fail = [0] * n_dev            # consecutive failures
+        self._evicted_until = [None] * n_dev    # monotonic deadline or None
+        self._probation = [False] * n_dev
+        self._dev_cooldown = [self.evict_cooldown_s] * n_dev
+        self._remapped: dict[int, list[tuple[int, ...]]] = {}
+        self._deadline_window: deque = deque(maxlen=self.shed_window)
+        # concurrency ------------------------------------------------------
+        self._lock = threading.RLock()          # queues / results / stats
+        self._cv = threading.Condition(self._lock)
+        self._step_lock = threading.RLock()     # serializes scheduler turns
+        self._work = threading.Event()
+        self._stop_event = threading.Event()
+        self._stepper: threading.Thread | None = None
+        self._stepper_error: Exception | None = None
         self._device_stats = [
             {"device": str(d) if d is not None else "default",
-             "batches": 0, "states": 0, "shapes": []}
+             "batches": 0, "states": 0, "shapes": [],
+             "failures": 0, "evictions": 0, "evicted": False}
             for d in self._devices]
         self.stats_ = ServeStats()
 
     # -- request intake ----------------------------------------------------
-    def submit(self, state, *, deadline_s: float | None = None) -> int:
+    def submit(self, state, *, deadline_s: float | None = None,
+               priority: int = 0) -> int:
         """Enqueue one state; returns the ticket results are keyed by.
 
         ``deadline_s`` is a per-request latency budget in seconds from
         now; a request settling later still returns its result but
-        increments ``stats()["deadline_misses"]``.
+        increments ``stats()["deadline_misses"]``.  ``priority`` orders
+        load shedding only (HIGHER survives longer; scheduling itself
+        stays FIFO-per-shape).  Thread-safe, non-blocking: with the
+        background stepper running this is all a caller ever does.
         """
         state = jnp.asarray(state, jnp.dtype(self.dtype))
         if state.ndim != self.spec.ndim:
             raise ValueError(f"state rank {state.ndim} != spec ndim "
                              f"{self.spec.ndim} (submit one state at a "
                              f"time; the server does the batching)")
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._pending.append(_Request(ticket, state, time.perf_counter(),
-                                      deadline_s))
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append(_Request(ticket, state, time.perf_counter(),
+                                          deadline_s, priority=priority))
+            self._stepper_error = None     # new work resumes the stepper
+        self._work.set()
         return ticket
 
     def submit_rollout(self, state, segments, *,
-                       deadline_s: float | None = None) -> int:
+                       deadline_s: float | None = None,
+                       priority: int = 0) -> int:
         """Enqueue one state for a ROLLOUT program; returns its ticket.
 
         ``segments`` is anything :func:`repro.rollout.program.as_segments`
@@ -321,11 +435,15 @@ class StencilServer:
                              "boundary (valid-mode grids shrink per "
                              "segment, breaking bucket shape grouping)")
         task = _RolloutTask(segments=segs)
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._rollouts[ticket] = task
-        self._pending.append(_Request(ticket, state, time.perf_counter(),
-                                      deadline_s, rollout=task))
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._rollouts[ticket] = task
+            self._pending.append(_Request(ticket, state, time.perf_counter(),
+                                          deadline_s, rollout=task,
+                                          priority=priority))
+            self._stepper_error = None
+        self._work.set()
         return ticket
 
     def rollout_results(self, ticket: int) -> list[tuple[int, jnp.ndarray]]:
@@ -337,51 +455,175 @@ class StencilServer:
         done AND its stream is empty; the final state is claimed
         separately via :meth:`results`.
         """
-        task = self._rollouts.get(ticket)
-        if task is None:
-            raise KeyError(f"ticket {ticket} is not a known rollout "
-                           f"(plain submit, never submitted, or already "
-                           f"fully drained)")
-        out, task.emits = list(task.emits), []
-        if task.done and not task.emits:
-            del self._rollouts[ticket]
-        return out
+        with self._lock:
+            task = self._rollouts.get(ticket)
+            if task is None:
+                raise KeyError(f"ticket {ticket} is not a known rollout "
+                               f"(plain submit, never submitted, cancelled, "
+                               f"or already fully drained)")
+            out, task.emits = list(task.emits), []
+            if task.done and not task.emits:
+                del self._rollouts[ticket]
+            return out
 
     def rollout_done(self, ticket: int) -> bool:
         """Whether a rollout finished its last segment (final result may
         still be unclaimed)."""
-        task = self._rollouts.get(ticket)
-        return task is None or task.done
+        with self._lock:
+            task = self._rollouts.get(ticket)
+            return task is None or task.done
 
-    def cancel(self, ticket: int) -> bool:
-        """Drop a pending request (e.g. one a failed flush() named)."""
-        n = len(self._pending)
-        self._pending = [r for r in self._pending if r.ticket != ticket]
-        return len(self._pending) < n
+    def cancel(self, ticket: int):
+        """Cancel one request (pending, failed, or mid-rollout).
+
+        Plain tickets: returns ``True`` if anything was dropped.  Rollout
+        tickets: the queued program is abandoned and the PARTIAL emits
+        settled so far are returned (a ``list``, possibly empty) — the
+        ticket's ``_RolloutTask`` no longer leaks in the server.  A
+        ticket whose bucket is already IN FLIGHT is settle-then-drop:
+        the dispatched device work completes (other tickets share the
+        bucket), then the cancelled ticket's result is discarded instead
+        of booked.  Already-settled results are NOT cancelled — claim
+        them with :meth:`results`.
+        """
+        with self._lock:
+            task = self._rollouts.pop(ticket, None)
+            before = len(self._pending)
+            self._pending = [r for r in self._pending if r.ticket != ticket]
+            removed = len(self._pending) < before
+            in_flight = any(r.ticket == ticket
+                            for fb in self._inflight for r in fb.requests)
+            if in_flight:
+                self._cancelled.add(ticket)
+            self._failed.pop(ticket, None)
+            if removed:
+                self._stepper_error = None   # the poison pill may be gone
+                self._work.set()
+            if task is not None:
+                emits, task.emits = list(task.emits), []
+                return emits
+            return removed or in_flight
 
     def pending_tickets(self) -> list[int]:
         """Tickets still waiting for a bucket, in submission order."""
-        return [r.ticket for r in self._pending]
+        with self._lock:
+            return [r.ticket for r in self._pending]
 
     # -- results -----------------------------------------------------------
     def ready(self, ticket: int) -> bool:
         """Whether ``results(ticket)`` would return without stepping."""
-        return ticket in self._done
+        with self._lock:
+            return ticket in self._done
 
-    def results(self, ticket: int) -> jnp.ndarray:
+    def _known_unsettled(self, ticket: int) -> bool:
+        return (any(r.ticket == ticket for r in self._pending)
+                or any(r.ticket == ticket
+                       for fb in self._inflight for r in fb.requests)
+                or ticket in self._rollouts)
+
+    def results(self, ticket: int, *,
+                timeout_s: float | None = None) -> jnp.ndarray:
         """Claim one settled result (removing it from the server).
 
         Unclaimed results are retained across any number of ``flush()`` /
         ``serve()`` calls — a recovered bucket's tickets are never lost —
         until this accessor (or a ``flush()`` return) hands them out.
+
+        ``timeout_s`` turns this into the BLOCKING accessor for
+        background-stepper mode: wait until the ticket settles (or was
+        shed/failed — the recorded error re-raises here), raising
+        ``TimeoutError`` after ``timeout_s`` seconds.  If the background
+        stepper died on an unrecoverable error while the ticket was
+        outstanding, that error surfaces here instead of hanging.
         """
-        try:
-            return self._done.pop(ticket)
-        except KeyError:
-            raise KeyError(
-                f"ticket {ticket} has no claimable result (unknown, still "
-                f"pending or in flight, or already claimed); run step() or "
-                f"flush() to settle pending work") from None
+        deadline = None if timeout_s is None \
+            else time.monotonic() + timeout_s
+        with self._cv:
+            while True:
+                if ticket in self._done:
+                    return self._done.pop(ticket)
+                err = self._failed.pop(ticket, None)
+                if err is not None:
+                    raise err
+                if not self._known_unsettled(ticket):
+                    raise KeyError(
+                        f"ticket {ticket} has no claimable result (unknown, "
+                        f"cancelled, or already claimed); run step() or "
+                        f"flush() to settle pending work") from None
+                if timeout_s is None:
+                    raise KeyError(
+                        f"ticket {ticket} has no claimable result (still "
+                        f"pending or in flight); run step() or flush() to "
+                        f"settle pending work, or pass timeout_s= to block")
+                if self._stepper_error is not None:
+                    raise RuntimeError(
+                        f"background stepper failed while ticket {ticket} "
+                        f"was outstanding: {self._stepper_error}"
+                    ) from self._stepper_error
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"ticket {ticket} did not settle within "
+                        f"{timeout_s}s")
+                self._cv.wait(remaining)
+
+    # -- background stepper ------------------------------------------------
+    def start(self, poll_s: float = 0.005) -> "StencilServer":
+        """Run the scheduler on a daemon thread until :meth:`stop`.
+
+        Each loop iteration is one ordinary :meth:`step` (the step lock
+        keeps it safe to ALSO call ``step()``/``flush()`` from other
+        threads).  On an unrecoverable turn error (a retry budget
+        exhausted) the stepper parks, the error surfaces through blocked
+        ``results(timeout_s=...)`` callers, and any ``submit()`` or
+        ``cancel()`` resumes stepping.  Idempotent; returns self.
+        """
+        if poll_s <= 0:
+            raise ValueError("poll_s > 0")
+        with self._lock:
+            if self._stepper is not None and self._stepper.is_alive():
+                return self
+            self._stop_event = threading.Event()
+            self._stepper_error = None
+            t = threading.Thread(target=self._stepper_loop, args=(poll_s,),
+                                 name="stencil-stepper", daemon=True)
+            self._stepper = t
+        t.start()
+        return self
+
+    def stop(self, timeout_s: float | None = 10.0) -> None:
+        """Stop the background stepper (queued work stays queued; a
+        later ``flush()``/``start()`` picks it up).  Idempotent."""
+        with self._lock:
+            t = self._stepper
+            self._stepper = None
+        if t is None or not t.is_alive():
+            return
+        self._stop_event.set()
+        self._work.set()
+        t.join(timeout_s)
+
+    @property
+    def running(self) -> bool:
+        """Whether the background stepper thread is alive."""
+        t = self._stepper
+        return t is not None and t.is_alive()
+
+    def _stepper_loop(self, poll_s: float) -> None:
+        while not self._stop_event.is_set():
+            with self._lock:
+                has_work = ((self._pending or self._inflight)
+                            and self._stepper_error is None)
+            if not has_work:
+                self._work.wait(timeout=poll_s)
+                self._work.clear()
+                continue
+            try:
+                self.step()
+            except Exception as e:       # park; submit()/cancel() resume
+                with self._cv:
+                    self._stepper_error = e
+                    self._cv.notify_all()
 
     # -- execution ---------------------------------------------------------
     def _problem(self, shape: tuple[int, ...], batch: int,
@@ -391,18 +633,69 @@ class StencilServer:
                               steps=self.steps if steps is None else steps,
                               batch=batch)
 
-    def _plan_kwargs(self) -> dict:
-        return {} if self.backends is None else {"backends": self.backends}
+    def _plan_kwargs(self, shape: tuple[int, ...] | None = None) -> dict:
+        """Planner pins for one shape group — the DEGRADED pin once the
+        fault ladder demoted the group to the fallback backend."""
+        backends = self.backends
+        if shape is not None:
+            backends = self._group_backends.get(shape, backends)
+        return {} if backends is None else {"backends": backends}
+
+    # -- device routing + eviction ----------------------------------------
+    def _active_devices(self) -> list[int]:
+        return [i for i in range(len(self._devices))
+                if self._evicted_until[i] is None]
 
     def _device_of(self, shape: tuple[int, ...]) -> int:
         """Round-robin shape-group -> device assignment (sticky, so a
-        group's buckets always hit the same cache + jit executables)."""
-        di = self._group_dev.get(shape)
-        if di is None:
-            di = len(self._group_dev) % len(self._devices)
-            self._group_dev[shape] = di
-            self._device_stats[di]["shapes"].append(_shape_str(shape))
-        return di
+        group's buckets always hit the same cache + jit executables;
+        evicted devices are skipped)."""
+        with self._lock:
+            di = self._group_dev.get(shape)
+            if di is None or self._evicted_until[di] is not None:
+                active = self._active_devices() or [0]
+                di = active[self._rr % len(active)]
+                self._rr += 1
+                self._group_dev[shape] = di
+                name = _shape_str(shape)
+                if name not in self._device_stats[di]["shapes"]:
+                    self._device_stats[di]["shapes"].append(name)
+            return di
+
+    def _evict_device(self, di: int, now: float) -> None:
+        """Remove one device from the rotation and remap its sticky
+        groups to survivors (lock held)."""
+        if len(self._active_devices()) <= 1:
+            return                        # never evict the last device
+        self._evicted_until[di] = now + self._dev_cooldown[di]
+        if self._probation[di]:
+            self._dev_cooldown[di] *= 2.0  # probation strike: back off more
+        self._probation[di] = False
+        self._dev_fail[di] = 0
+        self._device_stats[di]["evictions"] += 1
+        self._device_stats[di]["evicted"] = True
+        self.stats_.evictions += 1
+        moved = [s for s, d in self._group_dev.items() if d == di]
+        for shape in moved:
+            del self._group_dev[shape]    # next _device_of reassigns
+            self._remapped.setdefault(di, []).append(shape)
+
+    def _readmit_devices(self) -> None:
+        """Cooldown probe: an evicted device whose cooldown expired
+        rejoins the rotation on probation, taking back ONE of its
+        remapped groups so the probe actually runs traffic."""
+        now = time.monotonic()
+        with self._lock:
+            for di, until in enumerate(self._evicted_until):
+                if until is None or now < until:
+                    continue
+                self._evicted_until[di] = None
+                self._probation[di] = True
+                self._dev_fail[di] = 0
+                self._device_stats[di]["evicted"] = False
+                for shape in self._remapped.pop(di, []):
+                    self._group_dev[shape] = di   # the probe group
+                    break
 
     def bucket_cap(self, shape: tuple[int, ...]) -> int:
         """Admission-control bucket cap for one shape group, memoized.
@@ -419,7 +712,7 @@ class StencilServer:
                 di = self._device_of(shape)
                 cap = self.caches[di].bucket_cap(
                     self._problem(shape, 1), self.max_batch,
-                    rtol=self.admission_rtol, **self._plan_kwargs())
+                    rtol=self.admission_rtol, **self._plan_kwargs(shape))
             else:
                 cap = self.max_batch
             self._caps[shape] = cap
@@ -449,10 +742,12 @@ class StencilServer:
             program = RolloutProgram(
                 self._problem(shape, b, steps=seg.steps), (seg,))
             entry = self.caches[di].get_program(program,
-                                               **self._plan_kwargs())
+                                               **self._plan_kwargs(shape))
         else:
             entry = self.caches[di].get(self._problem(shape, b),
-                                        **self._plan_kwargs())
+                                        **self._plan_kwargs(shape))
+        chaos.fire("serve.dispatch", shape=_shape_str(shape), device=di,
+                   bucket=b)
         t0 = time.perf_counter()
         # dispatch only — readiness (and the entry's success accounting)
         # is deferred to _settle, so a failed first call stays cold and
@@ -471,6 +766,88 @@ class StencilServer:
         except Exception:
             pass
 
+    # -- the fault ladder --------------------------------------------------
+    def _bucket_failure(self, shape: tuple[int, ...], device: int,
+                        err: Exception,
+                        tickets: list[int]) -> Exception | None:
+        """One failed bucket through the degradation ladder.
+
+        Books the failure, advances the backend-fallback and
+        device-eviction counters, then charges the shape group's retry
+        budget: returns ``None`` when a retry is scheduled (after
+        sleeping the backoff) or the terminal error once the budget is
+        exhausted (the caller raises; the requests are back in the
+        queue either way).
+        """
+        now = time.monotonic()
+        with self._lock:
+            self.stats_.bucket_failures += 1
+            self._device_stats[device]["failures"] += 1
+            self._dev_fail[device] += 1
+            self._group_failures[shape] = self._group_failures.get(
+                shape, 0) + 1
+            # ladder rung 2: persistent kernel faults -> degrade the
+            # group to the fallback backend pin (bit-exact by the cross-
+            # backend parity guarantees; a NEW cache key, so the faulty
+            # executable is simply never asked again)
+            if (self.fallback_after is not None
+                    and self._group_failures[shape] >= self.fallback_after
+                    and self._group_backends.get(shape)
+                    != self.fallback_backends
+                    and self.backends != self.fallback_backends):
+                self._group_backends[shape] = list(self.fallback_backends)
+                self._caps.pop(shape, None)   # re-walk the cap if needed
+                self.stats_.fallbacks += 1
+            # ladder rung 3: a persistently failing DEVICE leaves the
+            # rotation (probation devices get one strike)
+            strikes = 1 if self._probation[device] else self.evict_after
+            if self._dev_fail[device] >= strikes:
+                self._evict_device(device, now)
+            pol = self._retry.get(shape)
+            if pol is None:
+                pol = self._retry[shape] = self.restart.clone()
+        try:
+            delay = pol.on_failure(err)
+        except RuntimeError:
+            return ValueError(
+                f"serving bucket of shape {shape} failed for tickets "
+                f"{tickets}: {err} (retry budget exhausted after "
+                f"{pol.max_failures} retries); the failed requests stay "
+                f"queued and completed results are returned by the next "
+                f"flush()")
+        with self._lock:
+            self.stats_.retries += 1
+        time.sleep(delay)
+        return None
+
+    def _maybe_shed(self) -> None:
+        """Ladder rung 4: deadline pressure sheds the lowest-priority
+        PENDING class (requests already dispatched always settle)."""
+        if self.shed_miss_rate is None:
+            return
+        with self._cv:
+            win = self._deadline_window
+            if len(win) < self.shed_window:
+                return
+            if sum(win) / len(win) <= self.shed_miss_rate:
+                return
+            prios = {r.priority for r in self._pending}
+            if len(prios) < 2:
+                return     # nothing is "lowest" in a uniform queue
+            low = min(prios)
+            shed = [r for r in self._pending if r.priority == low]
+            self._pending = [r for r in self._pending if r.priority != low]
+            for r in shed:
+                self._rollouts.pop(r.ticket, None)
+                self._failed[r.ticket] = RequestShed(
+                    f"ticket {r.ticket} (priority {r.priority}) shed: "
+                    f"deadline-miss rate over the last {len(win)} "
+                    f"deadline-carrying requests exceeded "
+                    f"{self.shed_miss_rate}")
+            self.stats_.shed += len(shed)
+            win.clear()     # fresh window before the next shed decision
+            self._cv.notify_all()
+
     def _admit(self) -> None:
         """Admit every pending request into dispatched buckets NOW.
 
@@ -478,20 +855,27 @@ class StencilServer:
         submitted by this turn (grouped by shape, capped by admission
         control) — a late submit rides the next turn's buckets instead
         of waiting for this group to fill.  A request leaves the queue
-        the moment its bucket dispatches; a bucket that fails to build
-        or dispatch leaves its requests queued, settles everything
-        already in flight, and raises naming the shape and tickets.
+        the moment its bucket dispatches; a bucket that fails to PLAN
+        (bucket-cap/planner errors are deterministic) fails fast, while
+        a dispatch failure of a planned bucket goes through the retry
+        ladder like a settle failure.  Either way failed requests stay
+        queued and the raised error names the shape and tickets.
         """
-        if not self._pending:
-            return
-        # group by (shape, next-hop signature): plain requests carry the
-        # empty signature, a rollout the identity of its NEXT segment —
-        # so plain sweeps never share a bucket with rollout hops, and
-        # rollouts batch exactly when their next executables coincide
-        by_shape: dict[tuple, list[_Request]] = {}
-        for r in self._pending:
-            sig = r.rollout.signature() if r.rollout else ()
-            by_shape.setdefault((tuple(r.state.shape), sig), []).append(r)
+        self._readmit_devices()
+        self._maybe_shed()
+        with self._lock:
+            if not self._pending:
+                return
+            # group by (shape, next-hop signature): plain requests carry
+            # the empty signature, a rollout the identity of its NEXT
+            # segment — so plain sweeps never share a bucket with rollout
+            # hops, and rollouts batch exactly when their next
+            # executables coincide
+            by_shape: dict[tuple, list[_Request]] = {}
+            for r in self._pending:
+                sig = r.rollout.signature() if r.rollout else ()
+                by_shape.setdefault((tuple(r.state.shape), sig),
+                                    []).append(r)
         for shape, _sig in sorted(by_shape):
             group = by_shape[(shape, _sig)]
             try:
@@ -504,88 +888,134 @@ class StencilServer:
                     f"stay queued and completed results are returned by the "
                     f"next flush()") from e
             for i in range(0, len(group), cap):
-                chunk = group[i:i + cap]
+                with self._lock:
+                    # revalidate against concurrent cancel()
+                    chunk = [r for r in group[i:i + cap]
+                             if r in self._pending]
+                if not chunk:
+                    continue
                 try:
                     fb = self._dispatch_bucket(shape, cap, chunk)
                 except Exception as e:
+                    di = self._device_of(shape)
+                    terminal = self._bucket_failure(
+                        shape, di, e, [r.ticket for r in chunk])
+                    if terminal is None:
+                        continue          # requests stay queued; next turn
                     self._salvage()
-                    raise ValueError(
-                        f"serving bucket of shape {shape} failed for "
-                        f"tickets {[r.ticket for r in chunk]}: {e}; the "
-                        f"failed requests stay queued and completed results "
-                        f"are returned by the next flush()") from e
-                ids = {r.ticket for r in chunk}
-                self._pending = [r for r in self._pending
-                                 if r.ticket not in ids]
-                self._inflight.append(fb)
+                    raise terminal from e
+                with self._lock:
+                    ids = {r.ticket for r in chunk}
+                    still = {r.ticket for r in self._pending
+                             if r.ticket in ids}
+                    # a ticket cancelled DURING the dispatch window is
+                    # settle-then-drop like any in-flight cancel
+                    self._cancelled.update(ids - still)
+                    self._pending = [r for r in self._pending
+                                     if r.ticket not in ids]
+                    self._inflight.append(fb)
                 if not self.async_dispatch:
                     self._settle([fb])
 
     def _settle(self, buckets: list[_InFlight]) -> int:
         """Block on the given in-flight buckets, book stats + latencies,
         move results to ``_done``.  A bucket whose deferred device work
-        failed requeues its requests (its executable stays COLD — the
-        success accounting sits after readiness) and the first failure is
-        re-raised after the rest settled."""
+        failed goes through the fault ladder (:meth:`_bucket_failure`):
+        its requests requeue under the shape group's retry budget, its
+        executable stays COLD (the success accounting sits after
+        readiness), and only an exhausted budget raises — after the rest
+        of the buckets settled."""
         settled = 0
-        failure: tuple[_InFlight, Exception] | None = None
+        failure: Exception | None = None
         for fb in buckets:
-            if fb not in self._inflight:
-                continue  # already settled by an earlier salvage pass
-            self._inflight.remove(fb)
+            # the bucket stays in _inflight THROUGH the device wait so a
+            # concurrent results()/cancel() always sees its tickets; it
+            # leaves only under the lock, at booking or requeue
+            with self._lock:
+                if fb not in self._inflight:
+                    continue  # already settled by an earlier salvage pass
             try:
+                chaos.fire("serve.settle", shape=_shape_str(fb.shape),
+                           device=fb.device)
                 jax.block_until_ready(fb.out)
             except Exception as e:
-                self._pending.extend(fb.requests)
-                if failure is None:
-                    failure = (fb, e)
+                with self._lock:
+                    self._inflight.remove(fb)
+                    keep = [r for r in fb.requests
+                            if r.ticket not in self._cancelled]
+                    for r in fb.requests:
+                        if r.ticket in self._cancelled:
+                            self._cancelled.discard(r.ticket)
+                            self._rollouts.pop(r.ticket, None)
+                    self._pending.extend(keep)
+                terminal = self._bucket_failure(
+                    fb.shape, fb.device, e, [r.ticket for r in keep])
+                if terminal is not None and failure is None:
+                    failure = terminal
+                    failure.__cause__ = e
                 continue
             now = time.perf_counter()
             dt = now - fb.t0
-            warm = fb.entry.mark_ready(dt)
-            st = self.stats_
-            if warm:
-                st.wall_s += dt
-                st.warm_states += len(fb.requests)
-            else:
-                st.compile_wall_s += dt
-            st.batches += 1
-            st.padded_states += fb.bucket - len(fb.requests)
-            ds = self._device_stats[fb.device]
-            ds["batches"] += 1
-            ds["states"] += len(fb.requests)
-            # a rollout bucket's out is the program pytree (final, emits);
-            # the one-segment program's emit (if any) IS the final state
-            final = fb.out[0] if fb.segment is not None else fb.out
-            for i, r in enumerate(fb.requests):
-                res = final if fb.bucket == 1 else final[i]
-                if r.rollout is not None:
-                    task = r.rollout
-                    task.seg += 1
-                    task.done_steps += fb.segment.steps
-                    if fb.segment.emit:
-                        # one-segment program: at most one emit, == res
-                        task.emits.append((task.done_steps, res))
-                    if not task.done:
-                        # requeue for the next segment, preserving the
-                        # submit clock (latency spans the whole program)
-                        self._pending.append(
-                            dataclasses.replace(r, state=res))
+            with self._cv:
+                self._inflight.remove(fb)
+                warm = fb.entry.mark_ready(dt)
+                st = self.stats_
+                if warm:
+                    st.wall_s += dt
+                    st.warm_states += len(fb.requests)
+                else:
+                    st.compile_wall_s += dt
+                st.batches += 1
+                st.padded_states += fb.bucket - len(fb.requests)
+                ds = self._device_stats[fb.device]
+                ds["batches"] += 1
+                ds["states"] += len(fb.requests)
+                # success resets the ladder counters for this group/device
+                self._dev_fail[fb.device] = 0
+                self._probation[fb.device] = False
+                self._dev_cooldown[fb.device] = self.evict_cooldown_s
+                self._group_failures[fb.shape] = 0
+                pol = self._retry.get(fb.shape)
+                if pol is not None:
+                    pol.on_success()
+                # a rollout bucket's out is the program pytree
+                # (final, emits); the one-segment program's emit (if
+                # any) IS the final state
+                final = fb.out[0] if fb.segment is not None else fb.out
+                for i, r in enumerate(fb.requests):
+                    res = final if fb.bucket == 1 else final[i]
+                    if r.ticket in self._cancelled:
+                        # settle-then-drop: the bucket ran, the
+                        # cancelled ticket's share is discarded
+                        self._cancelled.discard(r.ticket)
+                        self._rollouts.pop(r.ticket, None)
                         continue
-                self._done[r.ticket] = res
-                st.requests += 1
-                lat = now - r.submit_t
-                st.latencies_s.append(lat)
-                if r.deadline_s is not None and lat > r.deadline_s:
-                    st.deadline_misses += 1
-                settled += 1
+                    if r.rollout is not None:
+                        task = r.rollout
+                        task.seg += 1
+                        task.done_steps += fb.segment.steps
+                        if fb.segment.emit:
+                            # one-segment program: at most one emit, == res
+                            task.emits.append((task.done_steps, res))
+                        if not task.done:
+                            # requeue for the next segment, preserving the
+                            # submit clock (latency spans the whole
+                            # program)
+                            self._pending.append(
+                                dataclasses.replace(r, state=res))
+                            continue
+                    self._done[r.ticket] = res
+                    st.requests += 1
+                    lat = now - r.submit_t
+                    st.latencies_s.append(lat)
+                    if r.deadline_s is not None:
+                        miss = lat > r.deadline_s
+                        st.deadline_misses += miss
+                        self._deadline_window.append(int(miss))
+                    settled += 1
+                self._cv.notify_all()
         if failure is not None:
-            fb, e = failure
-            raise ValueError(
-                f"serving bucket of shape {fb.shape} failed for tickets "
-                f"{[r.ticket for r in fb.requests]}: {e}; the failed "
-                f"requests stay queued and completed results are returned "
-                f"by the next flush()") from e
+            raise failure
         return settled
 
     def step(self) -> int:
@@ -595,14 +1025,20 @@ class StencilServer:
         then settles the buckets dispatched on EARLIER turns — the
         double-buffering discipline: while the device works on last
         turn's buckets, this turn's stacking/padding/dispatch happens on
-        the host, and only then does the host block.
+        the host, and only then does the host block.  Turns serialize on
+        the step lock (safe alongside the background stepper); device
+        waits happen outside the state lock, so concurrent ``submit()``
+        never waits on a sweep.
         """
-        before = self.stats_.requests
-        prior = list(self._inflight)
-        self._admit()
-        if self.async_dispatch:
-            self._settle(prior)
-        return self.stats_.requests - before
+        with self._step_lock:
+            with self._lock:
+                before = self.stats_.requests
+                prior = list(self._inflight)
+            self._admit()
+            if self.async_dispatch:
+                self._settle(prior)
+            with self._lock:
+                return self.stats_.requests - before
 
     def flush(self) -> dict[int, jnp.ndarray]:
         """Step until nothing is pending or in flight; return every
@@ -610,18 +1046,23 @@ class StencilServer:
 
         Lossless bucket-by-bucket progress: a request leaves the queue
         the moment its bucket DISPATCHES, and its result is retained
-        once settled.  If a bucket fails, the error names the offending
-        shape/tickets; the failed bucket's requests stay queued (cancel
-        or resubmit them), already-completed buckets are neither
-        recomputed nor double-counted, and their results are returned by
-        the next successful ``flush()`` — or individually by
+        once settled.  If a bucket fails, its requests retry under the
+        shape group's budget; once the budget exhausts the error names
+        the offending shape/tickets, the failed bucket's requests stay
+        queued (cancel or resubmit them), already-completed buckets are
+        neither recomputed nor double-counted, and their results are
+        returned by the next successful ``flush()`` — or individually by
         :meth:`results`, which is how ``serve()`` claims, so one
         caller's flush can never strand another's tickets.
         """
-        while self._pending or self._inflight:
+        while True:
+            with self._lock:
+                if not (self._pending or self._inflight):
+                    break
             self.step()
-        results, self._done = self._done, {}
-        return results
+        with self._lock:
+            results, self._done = self._done, {}
+            return results
 
     def serve(self, states: Sequence) -> list[jnp.ndarray]:
         """Submit every state, flush, return results in submission order.
@@ -633,7 +1074,8 @@ class StencilServer:
         tickets = [self.submit(s) for s in states]
         results = self.flush()
         out = [results.pop(t) for t in tickets]
-        self._done.update(results)
+        with self._lock:
+            self._done.update(results)
         return out
 
     __call__ = serve
@@ -642,41 +1084,56 @@ class StencilServer:
     def reset_stats(self) -> None:
         """Zero the serving counters (cache counters are left alone) —
         e.g. between a warm-up pass and a measured pass."""
-        self.stats_ = ServeStats()
+        with self._lock:
+            self.stats_ = ServeStats()
 
     def stats(self) -> dict:
         """Serving counters + latency percentiles + admission caps +
-        per-device columns, merged with the plan-cache stats (summed
-        across devices; each device row carries its own)."""
-        st = self.stats_
-        s = dataclasses.asdict(st)
-        lat = s.pop("latencies_s")
-        s["per_state_s"] = st.per_state_s
-        s["throughput_states_per_s"] = st.throughput
-        s["latency"] = {
-            "count": len(lat),
-            "p50_s": st.p50_latency_s,
-            "p95_s": st.p95_latency_s,
-            "mean_s": float(np.mean(lat)) if lat else 0.0,
-            "max_s": float(np.max(lat)) if lat else 0.0,
-        }
-        s["admission"] = {_shape_str(shape): cap
-                          for shape, cap in sorted(self._caps.items())}
-        per_dev = []
-        for ds, cache in zip(self._device_stats, self.caches):
-            row = dict(ds)
-            row["plan_cache"] = cache.stats()
-            per_dev.append(row)
-        s["devices"] = per_dev
-        if len(self.caches) == 1:
-            s["plan_cache"] = self.cache.stats()
-        else:
-            merged: dict[str, int] = {}
-            for cache in self.caches:
-                for k, v in cache.stats().items():
-                    merged[k] = merged.get(k, 0) + v
-            s["plan_cache"] = merged
-        return s
+        fault-ladder state + per-device columns, merged with the
+        plan-cache stats (summed across devices; each device row carries
+        its own)."""
+        with self._lock:
+            st = self.stats_
+            s = dataclasses.asdict(st)
+            lat = s.pop("latencies_s")
+            s["per_state_s"] = st.per_state_s
+            s["throughput_states_per_s"] = st.throughput
+            s["latency"] = {
+                "count": len(lat),
+                "p50_s": st.p50_latency_s,
+                "p95_s": st.p95_latency_s,
+                "mean_s": float(np.mean(lat)) if lat else 0.0,
+                "max_s": float(np.max(lat)) if lat else 0.0,
+            }
+            s["admission"] = {_shape_str(shape): cap
+                              for shape, cap in sorted(self._caps.items())}
+            s["faults"] = {
+                "bucket_failures": st.bucket_failures,
+                "retries": st.retries,
+                "fallbacks": st.fallbacks,
+                "evictions": st.evictions,
+                "shed": st.shed,
+            }
+            s["degraded"] = {_shape_str(shape): list(b) for shape, b
+                             in sorted(self._group_backends.items())}
+            s["stepper"] = {"running": self.running,
+                            "error": str(self._stepper_error)
+                            if self._stepper_error else None}
+            per_dev = []
+            for ds, cache in zip(self._device_stats, self.caches):
+                row = dict(ds)
+                row["plan_cache"] = cache.stats()
+                per_dev.append(row)
+            s["devices"] = per_dev
+            if len(self.caches) == 1:
+                s["plan_cache"] = self.cache.stats()
+            else:
+                merged: dict[str, int] = {}
+                for cache in self.caches:
+                    for k, v in cache.stats().items():
+                        merged[k] = merged.get(k, 0) + v
+                s["plan_cache"] = merged
+            return s
 
 
 # ---------------------------------------------------------------------------
@@ -703,6 +1160,14 @@ def main() -> None:
                     help="disable the bucket-cliff admission cap")
     ap.add_argument("--all-devices", action="store_true",
                     help="route shape groups round-robin over jax.devices()")
+    ap.add_argument("--background", action="store_true",
+                    help="drive the scheduler from the background stepper "
+                         "thread (submit + blocking results) instead of "
+                         "serve()")
+    ap.add_argument("--chaos-settle", type=float, default=0.0,
+                    help="inject seeded settle faults at this rate (the "
+                         "retry ladder must recover; see "
+                         "repro.runtime.chaos)")
     args = ap.parse_args()
 
     spec = PAPER_SUITE()[args.cell]
@@ -719,15 +1184,31 @@ def main() -> None:
     states = [rng.normal(size=shapes[i % len(shapes)]).astype(np.float32)
               for i in range(args.requests)]
 
-    t0 = time.perf_counter()
-    server.serve(states)
-    cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    server.serve(states)
-    warm = time.perf_counter() - t0
+    def run_pass():
+        if args.background:
+            server.start()
+            try:
+                tickets = [server.submit(s) for s in states]
+                return [server.results(t, timeout_s=300.0) for t in tickets]
+            finally:
+                server.stop()
+        return server.serve(states)
+
+    plan = chaos.FaultPlan(seed=0)
+    if args.chaos_settle > 0:
+        plan.rule("serve.settle", rate=args.chaos_settle)
+    with plan:
+        t0 = time.perf_counter()
+        run_pass()
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_pass()
+        warm = time.perf_counter() - t0
 
     s = server.stats()
     mode = "sync" if args.sync else "async"
+    if args.background:
+        mode += "+background"
     print(f"served {s['requests']} states of {args.cell} x {args.steps} "
           f"steps in {s['batches']} batches ({mode} dispatch, "
           f"{s['padded_states']} padded slots)")
@@ -743,11 +1224,17 @@ def main() -> None:
           f"(size {s['plan_cache']['size']})")
     caps = ", ".join(f"{k}<={v}" for k, v in s["admission"].items())
     print(f"admission caps: {caps or '-'}")
+    if args.chaos_settle > 0:
+        f = s["faults"]
+        print(f"chaos: {plan.fired()} injected faults -> "
+              f"{f['bucket_failures']} bucket failures, {f['retries']} "
+              f"retries, {f['fallbacks']} fallbacks (all recovered)")
     if len(s["devices"]) > 1:
-        print("device        batches  states  shapes")
+        print("device        batches  states  fails  shapes")
         for row in s["devices"]:
             print(f"{row['device']:<13s} {row['batches']:7d} "
-                  f"{row['states']:7d}  {','.join(row['shapes']) or '-'}")
+                  f"{row['states']:7d} {row['failures']:6d}  "
+                  f"{','.join(row['shapes']) or '-'}")
 
 
 if __name__ == "__main__":

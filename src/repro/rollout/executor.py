@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import Any, Callable, Sequence
 
 import msgpack
@@ -38,6 +37,8 @@ from repro.core.planner import compile_plan
 from repro.rollout.planning import RolloutPlan, plan_program
 from repro.rollout.program import (RolloutProgram, build_update,
                                    segment_out_grid)
+from repro.runtime import chaos
+from repro.runtime.fault_tolerance import supervised
 
 __all__ = ["CompiledRollout", "RolloutResult", "compile_program",
            "run_checkpointed"]
@@ -77,7 +78,10 @@ class CompiledRollout:
         """Advance one segment: fused sweep, then the update op."""
         y = self.sweeps[i](x)
         up = self.updates[i]
-        return up(y) if up is not None else y
+        if up is not None:
+            y = up(y)
+            chaos.fire("rollout.update", segment=int(i))
+        return y
 
     def stream(self, x, start_segment: int = 0):
         """Yield ``(segment index, cumulative step, state)`` after every
@@ -187,9 +191,21 @@ def run_checkpointed(compiled: CompiledRollout, x, *,
     :class:`StepTimeout` into the retry path.  ``restart``
     (:class:`RestartPolicy`) converts a failed segment into
     sleep-backoff-and-re-run-from-segment-start; without one, failures
-    propagate (with checkpoints intact for the next attempt).
-    ``fault_injector(segment, attempt)`` runs after each segment's
-    dispatch and may raise — the test hook for injected failures.
+    propagate (with checkpoints intact for the next attempt).  Both run
+    through the shared :func:`repro.runtime.fault_tolerance.supervised`
+    loop — the same primitives the serving scheduler's per-group retry
+    budgets use.  ``fault_injector(segment, attempt)`` runs after each
+    segment's dispatch and may raise — the legacy test hook; the chaos
+    sites ``rollout.segment`` / ``checkpoint.write`` /
+    ``checkpoint.read`` (:mod:`repro.runtime.chaos`) are the seeded
+    equivalent.
+
+    Resume walks the retained checkpoints NEWEST-FIRST: a torn or
+    corrupt latest checkpoint (truncated manifest, unreadable shards —
+    e.g. a chaos-injected torn write) is skipped in favor of the
+    previous retained one (the ``keep_last`` window exists precisely so
+    a bad latest is not fatal); only a checkpoint that restores cleanly
+    but belongs to a DIFFERENT program raises.
     """
     program = compiled.program
     n = len(program.segments)
@@ -199,46 +215,39 @@ def run_checkpointed(compiled: CompiledRollout, x, *,
         # keep= (not keep_last=) so keep_last=None means retain-all here
         mgr = CheckpointManager(directory, keep=keep_last,
                                 async_save=False)
-        step0 = mgr.latest() if resume else None
-        if step0 is not None:
-            tree, extra = restore_checkpoint(
-                directory, step0, _manifest_target(directory, step0))
-            if extra.get("program") != program.digest():
-                raise ValueError(
-                    f"checkpoint at {directory} step {step0} belongs to a "
-                    f"different rollout program "
-                    f"({extra.get('program')} != {program.digest()})")
-            start = int(extra["segment"])
-            x = tree["state"]
-            emits = [(int(k), v)
-                     for k, v in sorted(tree.get("emits", {}).items())]
+        if resume:
+            for step0 in reversed(mgr.steps()):
+                try:
+                    tree, extra = restore_checkpoint(
+                        directory, step0, _manifest_target(directory, step0))
+                except Exception:
+                    # torn/corrupt checkpoint: fall back to the previous
+                    # retained one instead of failing the whole resume
+                    continue
+                if extra.get("program") != program.digest():
+                    raise ValueError(
+                        f"checkpoint at {directory} step {step0} belongs to "
+                        f"a different rollout program "
+                        f"({extra.get('program')} != {program.digest()})")
+                start = int(extra["segment"])
+                x = tree["state"]
+                emits = [(int(k), v)
+                         for k, v in sorted(tree.get("emits", {}).items())]
+                break
 
     t = sum(s.steps for s in program.segments[:start])
     for i in range(start, n):
         seg_start = x
-        attempt = 0
-        while True:
-            attempt += 1
-            try:
-                if monitor is not None:
-                    monitor.start_step(i)
-                y = compiled.run_segment(i, seg_start)
-                if fault_injector is not None:
-                    fault_injector(i, attempt)
-                y = jax.block_until_ready(y)
-                if monitor is not None:
-                    monitor.end_step()
-            except Exception as e:
-                if restart is None:
-                    raise
-                # re-run from the segment's start state after backoff;
-                # the policy raises past its budget
-                time.sleep(restart.on_failure(e))
-                continue
-            break
-        if restart is not None:
-            restart.on_success()
-        x = y
+
+        def _attempt(attempt: int, i=i, seg_start=seg_start):
+            y = compiled.run_segment(i, seg_start)
+            chaos.fire("rollout.segment", segment=int(i),
+                       attempt=int(attempt))
+            if fault_injector is not None:
+                fault_injector(i, attempt)
+            return jax.block_until_ready(y)
+
+        x = supervised(_attempt, restart=restart, monitor=monitor, step=i)
         t += program.segments[i].steps
         if program.segments[i].emit:
             emits.append((t, x))
