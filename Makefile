@@ -1,7 +1,7 @@
 # Canonical test entry points (see ROADMAP "Tier-1 verify").
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-slow test-parity test-chaos bench-temporal bench-smoke plan-report docs-check
+.PHONY: test test-all test-slow test-parity test-chaos test-dist-chaos bench-temporal bench-smoke plan-report docs-check
 
 # tier-1 gate: exactly the ROADMAP command (pytest.ini excludes `slow`)
 test:
@@ -26,6 +26,14 @@ test-parity:
 test-chaos:
 	$(PY) -m pytest tests/test_chaos.py -q -m ""
 
+# the distributed fault ladder: dist.* sites, sharded checkpoints and
+# reshard-on-failure, slow site x action x seed x mesh-shape matrix
+# included — every case runs in a subprocess under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 (the test file
+# sets this itself; the pytest process stays at 1 device)
+test-dist-chaos:
+	$(PY) -m pytest tests/test_dist_chaos.py -q -m ""
+
 bench-temporal:
 	$(PY) benchmarks/bench_temporal.py
 
@@ -37,8 +45,9 @@ bench-temporal:
 # step-by-step), BENCH_varying.json (varying/masked scenario traffic
 # tax + masked skip fractions) and BENCH_chaos.json (recovered
 # throughput + tail latency under seeded fault rates, sync vs
-# background-stepper mode) — run once per PR so the repo records how
-# the cost model and decisions drift over time.
+# background-stepper mode, plus the mesh reshard-recovery tax of a
+# seeded 4 -> 2 reshard-on-failure) — run once per PR so the repo
+# records how the cost model and decisions drift over time.
 bench-smoke:
 	$(PY) benchmarks/bench_plan.py --json
 	$(PY) benchmarks/bench_temporal.py --json

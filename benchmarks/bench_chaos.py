@@ -17,8 +17,17 @@ blocks on ``results(ticket, timeout_s=...)``) — the two concurrency
 stories the runtime supports.  The retry backoff is deliberately small
 (5 ms base) so the benchmark measures scheduling overhead, not sleeps.
 
+The ``--mesh`` section (also part of ``--json``) prices the DISTRIBUTED
+rung: a mesh-sharded rollout hit by a seeded ``dist.exchange`` fault
+storm that exhausts a segment's retry budget and forces a 4 -> 2
+reshard-on-failure from the shard checkpoint.  It runs in a subprocess
+with 8 fake CPU devices (the bench process itself stays at 1 device)
+and records the reshard-recovery tax — faulted wall clock over the
+fault-free mesh run, recovery bit-exact.
+
     PYTHONPATH=src python benchmarks/bench_chaos.py --json [--out BENCH_chaos.json]
     PYTHONPATH=src python benchmarks/bench_chaos.py          # readable table
+    PYTHONPATH=src python benchmarks/bench_chaos.py --mesh   # reshard tax only
     PYTHONPATH=src python benchmarks/bench_chaos.py --smoke  # tier-1 gate
 
 ``make bench-smoke`` runs the ``--json`` form so every PR leaves a
@@ -26,13 +35,16 @@ diffable recovery-cost trajectory point in ``BENCH_chaos.json``.
 """
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 from repro import api
 
-BENCH_VERSION = 1
+BENCH_VERSION = 2
 
 CELL = "box2d_r1"
 GRID = (48, 48)
@@ -125,6 +137,91 @@ def measure(rates=RATES, requests=REQUESTS):
     return out
 
 
+# The distributed rung: measured in a child process with fake devices.
+_MESH_DEVICES = 8
+_MESH_CHILD = r"""
+import json, tempfile, time
+import numpy as np, jax.numpy as jnp
+from repro import api
+from repro.launch.mesh import make_mesh
+from repro.rollout.program import RolloutProgram, Segment, UpdateOp
+from repro.rollout.executor import compile_program, run_checkpointed
+
+SPEC = api.PAPER_SUITE()["box2d_r1"]
+GRID = (48, 48)
+X = jnp.asarray(np.random.default_rng(0).normal(size=GRID), jnp.float32)
+
+def compiled(n):
+    prob = api.StencilProblem(SPEC, GRID, boundary="periodic", steps=1,
+                              mesh=make_mesh((n,), ("gx",)),
+                              grid_axes=("gx", ""))
+    prog = RolloutProgram(prob, [
+        Segment(2, emit=True),
+        Segment(2, UpdateOp("scale", {"factor": 0.5}), emit=True),
+        Segment(2, emit=True)])
+    return compile_program(prog, backends=["jnp"])
+
+def timed(fn, reps=3):
+    best, out = None, None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best, out
+
+def checkpointed(n):
+    # fault-free rows checkpoint too, so the tax ratio isolates the
+    # retries + reshard recompile + resharded restore, not the writes
+    with tempfile.TemporaryDirectory() as d:
+        return run_checkpointed(compiled(n), X, directory=d)
+
+compiled(4); compiled(2)                      # warm the compiles
+free_s, ref = timed(lambda: checkpointed(4))
+shrunk_s, _ = timed(lambda: checkpointed(2))
+
+def faulted():
+    with tempfile.TemporaryDirectory() as d:
+        plan = api.FaultPlan(seed=5).rule("dist.exchange", at=(1, 2, 3),
+                                          match={"chunk": 0})
+        with plan:
+            res = run_checkpointed(
+                compiled(4), X, directory=d,
+                restart=api.RestartPolicy(max_failures=2, backoff_s=0.0))
+        return plan, res
+
+fault_s, (plan, res) = timed(faulted)
+assert res.resharded == 1 and res.recovered == (0, 1, 0), (
+    res.resharded, res.recovered)
+for (_, a), (_, b) in zip(res.emits, ref.emits):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), "not bit-exact"
+print(json.dumps({
+    "mesh_shape": [4], "shrunk_shape": [2], "grid": list(GRID),
+    "site": "dist.exchange", "injected": plan.fired(),
+    "attempts": list(res.attempts), "resharded": res.resharded,
+    "fault_free_ms": free_s * 1e3,
+    "shrunk_fault_free_ms": shrunk_s * 1e3,
+    "faulted_ms": fault_s * 1e3,
+    "reshard_tax_x": fault_s / free_s,
+    "bit_exact": True,
+}))
+"""
+
+
+def measure_mesh():
+    """The reshard-recovery tax row, measured under fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_MESH_DEVICES}"
+    env.setdefault("PYTHONPATH",
+                   os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", _MESH_CHILD],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh bench child failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
 def emit_json(path="BENCH_chaos.json"):
     data = {
         "bench_version": BENCH_VERSION,
@@ -133,6 +230,7 @@ def emit_json(path="BENCH_chaos.json"):
         "fault_site": "serve.settle", "seed": SEED,
         "rates": [f"{r:g}" for r in RATES],
         "measured": measure(),
+        "mesh": measure_mesh(),
     }
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
@@ -142,7 +240,8 @@ def emit_json(path="BENCH_chaos.json"):
                 for r in rows.values())
     print(f"wrote {path}: {len(RATES)} fault rates x "
           f"{len(m)} modes, all recoveries bit-exact; worst-case "
-          f"chaos tax {worst:.2f}x wall clock")
+          f"chaos tax {worst:.2f}x wall clock; mesh reshard tax "
+          f"{data['mesh']['reshard_tax_x']:.2f}x")
     return data
 
 
@@ -178,9 +277,18 @@ def main():
     ap.add_argument("--out", default="BENCH_chaos.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny faulted pass per mode (the tier-1 gate)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="only the distributed reshard-recovery tax row "
+                         "(subprocess with fake devices)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+        return
+    if args.mesh:
+        row = measure_mesh()
+        print(json.dumps(row, indent=2, sort_keys=True))
+        print(f"reshard 4 -> 2 recovery tax "
+              f"{row['reshard_tax_x']:.2f}x (bit-exact)")
         return
     if args.json:
         emit_json(args.out)

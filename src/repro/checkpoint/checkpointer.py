@@ -6,6 +6,12 @@ Layout (one directory per step):
         shard_<host>_<n>.npz      -- local addressable shards
     step_000100/                  -- atomic rename on completion
 
+The manifest records a content digest PER SHARD FILE, so a torn
+single-shard write (one ``shard_<n>.npz`` truncated while the manifest
+and the rename completed) is detected at restore time — the digest
+mismatch raises and a resume ladder falls back to the newest intact
+full checkpoint, exactly like a torn manifest.
+
 Restore reassembles global arrays from shard index metadata and re-shards
 onto the *current* mesh — which may have a different shape/size than the
 mesh that wrote the checkpoint (elastic scaling / failure recovery).
@@ -14,6 +20,7 @@ the multi-host layout is exercised end-to-end with fake devices.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import re
 import shutil
@@ -31,6 +38,14 @@ from repro.runtime import chaos
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "retained_steps", "CheckpointManager"]
+
+
+def _file_digest(path: str) -> str:
+    h = hashlib.sha1()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _tree_paths(tree):
@@ -77,18 +92,35 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     for fname, blob in shard_blobs.items():
         np.savez(os.path.join(tmp, fname + ".npz"),
                  **{k.replace("/", "__"): v for k, v in blob.items()})
+    # per-shard-file content digests: restore verifies each blob against
+    # these before trusting it, so a torn SINGLE-shard write is as
+    # detectable as a torn manifest
+    manifest["shard_digests"] = {
+        fname: _file_digest(os.path.join(tmp, fname + ".npz"))
+        for fname in shard_blobs}
     mpath = os.path.join(tmp, "manifest.msgpack")
     with open(mpath, "wb") as f:
         f.write(msgpack.packb(manifest))
     # fault site: "raise" models a crash mid-write (the .tmp is left
     # behind — invisible to latest_step/GC); "corrupt" models a TORN
-    # write that still completed the rename (truncated manifest), the
-    # case the resume fallback must skip over
+    # write that still completed the rename: with true multi-device
+    # shards the highest-numbered shard file is truncated (a single
+    # device's write torn mid-flight, caught by its manifest digest);
+    # otherwise the manifest itself is truncated (the PR-9 shape).
+    # Either way the resume fallback must skip to an older checkpoint.
     if chaos.fire("checkpoint.write", step=int(step)) == "corrupt":
-        with open(mpath, "rb") as f:
-            half = f.read()[: max(1, os.path.getsize(mpath) // 2)]
-        with open(mpath, "wb") as f:
-            f.write(half)
+        sharded = sorted(f for f in shard_blobs if f != "shard_full")
+        if sharded:
+            spath = os.path.join(tmp, sharded[-1] + ".npz")
+            with open(spath, "rb") as f:
+                half = f.read()[: max(1, os.path.getsize(spath) // 2)]
+            with open(spath, "wb") as f:
+                f.write(half)
+        else:
+            with open(mpath, "rb") as f:
+                half = f.read()[: max(1, os.path.getsize(mpath) // 2)]
+            with open(mpath, "wb") as f:
+                f.write(half)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -117,11 +149,18 @@ def restore_checkpoint(directory: str, step: int, target_tree: Any,
     chaos.fire("checkpoint.read", step=int(step))
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
+    digests = manifest.get("shard_digests", {})
     blobs: dict[str, Any] = {}
 
     def load_blob(fname):
         if fname not in blobs:
-            blobs[fname] = np.load(os.path.join(path, fname + ".npz"))
+            fpath = os.path.join(path, fname + ".npz")
+            want = digests.get(fname)
+            if want is not None and _file_digest(fpath) != want:
+                raise ValueError(
+                    f"checkpoint shard {fname!r} at step {step} fails its "
+                    f"manifest digest (torn write)")
+            blobs[fname] = np.load(fpath)
         return blobs[fname]
 
     by_key = {}
@@ -181,8 +220,18 @@ class CheckpointManager:
 
     def save(self, step: int, tree: Any, extra: dict | None = None):
         self.wait()
-        # snapshot to host memory before going async (donation safety)
-        host_tree = jax.tree.map(np.asarray, tree)
+
+        def snapshot(leaf):
+            # multi-device jax.Arrays stay as-is (immutable, and
+            # np.asarray would gather them — save_checkpoint wants the
+            # per-device shards); everything else snapshots to host
+            # memory before going async (donation safety)
+            if isinstance(leaf, jax.Array) and \
+                    len(leaf.sharding.device_set) > 1:
+                return leaf
+            return np.asarray(leaf)
+
+        host_tree = jax.tree.map(snapshot, tree)
 
         def work():
             try:

@@ -37,6 +37,8 @@ from repro.compat import axis_size, shard_map
 from repro.core import temporal
 from repro.core.engine import StencilEngine
 from repro.core.stencil_spec import StencilSpec
+from repro.runtime import chaos
+from repro.runtime.chaos import FaultError
 
 __all__ = ["halo_exchange", "distributed_stencil_step",
            "distributed_fused_chunk", "make_distributed_stepper",
@@ -254,17 +256,65 @@ class DistributedStepper:
     shard_map'd function (traceable with ``jax.make_jaxpr`` — the planner's
     acceptance test counts its ``ppermute`` equations); ``schedule`` is the
     static chunk schedule one call advances through.
+
+    Calling the stepper routes through the HOST-side chaos wrapper: with
+    a :class:`repro.runtime.chaos.FaultPlan` active, every call fires
+    ``dist.device`` once and ``dist.chunk`` / ``dist.exchange`` once per
+    fused chunk (firing indices are per-rule call counts — exact and
+    replayable), then dispatches the SAME jitted executable.  With no
+    plan active the wrapper is one global read; either way the compiled
+    program (and its ppermute count per chunk) is untouched — host
+    wrappers cannot appear in a jaxpr.
     """
 
     def __init__(self, fn: Callable, global_fn: Callable,
-                 schedule: tuple[int, ...], mesh: Mesh, pspec: P):
+                 schedule: tuple[int, ...], mesh: Mesh, pspec: P,
+                 radius: int = 1):
         self.fn = fn
         self.global_fn = global_fn
         self.schedule = tuple(schedule)
         self.mesh = mesh
         self.pspec = pspec
+        self.radius = int(radius)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.devices.size
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if chaos.active() is None:
+            return self.fn(x)
+        return self._chaos_call(x)
+
+    def _chaos_call(self, x: jnp.ndarray) -> jnp.ndarray:
+        """One stepper call with the mesh fault surface instrumented.
+
+        ``raise`` kills the call before dispatch (a lost device / failed
+        chunk launch); ``delay`` models a slow exchange or straggling
+        device; ``corrupt`` (meaningful on ``dist.exchange``) models
+        strips corrupted on the wire: the sweep runs to completion on a
+        perturbed input — latency paid, result poisoned — then the
+        transport checksum catches it and the call raises into the
+        supervised retry path, discarding the poisoned result.
+        """
+        ctx = {"devices": self.n_devices,
+               "mesh": "x".join(str(n) for n in self.mesh.devices.shape)}
+        corrupted: tuple[str, int] | None = None
+        if chaos.fire("dist.device", **ctx) == "corrupt":
+            corrupted = ("dist.device", 0)
+        for k, t in enumerate(self.schedule):
+            if chaos.fire("dist.chunk", chunk=k, depth=int(t),
+                          **ctx) == "corrupt" and corrupted is None:
+                corrupted = ("dist.chunk", k)
+            if chaos.fire("dist.exchange", chunk=k,
+                          width=int(t * self.radius),
+                          **ctx) == "corrupt" and corrupted is None:
+                corrupted = ("dist.exchange", k)
+        if corrupted is not None:
+            site, k = corrupted
+            jax.block_until_ready(self.fn(x + jnp.ones((), x.dtype)))
+            raise FaultError(site, k, "corrupted halo strips detected "
+                                      "(transport checksum)")
         return self.fn(x)
 
 
@@ -348,7 +398,8 @@ def make_fused_distributed_stepper(spec: StencilSpec, mesh: Mesh,
     fn = jax.jit(sharded,
                  in_shardings=NamedSharding(mesh, pspec),
                  out_shardings=NamedSharding(mesh, pspec))
-    return DistributedStepper(fn, sharded, schedule, mesh, pspec)
+    return DistributedStepper(fn, sharded, schedule, mesh, pspec,
+                              radius=spec.order)
 
 
 def make_distributed_stepper(spec: StencilSpec, mesh: Mesh,

@@ -329,7 +329,7 @@ class PlanCache:
             self.evictions += 1
         return entry
 
-    def get_program(self, program, *, calibration=None,
+    def get_program(self, program, *, calibration=None, mesh=None,
                     **plan_kwargs) -> CachedExecutable:
         """The compiled executable for a whole rollout program, memoized
         as ONE entry.
@@ -344,6 +344,11 @@ class PlanCache:
         per-segment planning routes through :meth:`plan_only`'s memo, so
         programs sharing segment shapes share cost tables.  The entry's
         ``plan`` is the :class:`repro.rollout.planning.RolloutPlan`.
+
+        Mesh-sharded programs key like distributed sweeps — the mesh
+        SHAPE is part of :func:`cache_key` via the problem's sharding
+        tuple (a reshard is a different executable), while ``mesh``
+        itself only materializes the steppers, exactly as in :meth:`get`.
         """
         from repro.rollout.executor import compile_program
         from repro.rollout.planning import plan_program
@@ -363,7 +368,8 @@ class PlanCache:
         chaos.fire("cache.compile",
                    backend=rplan.segment_plans[0].backend,
                    batch=int(program.problem.batch))
-        compiled = compile_program(rplan, interpret=self._interpret)
+        compiled = compile_program(rplan, interpret=self._interpret,
+                                   mesh=mesh)
 
         def fn(x):
             # per-segment sweeps/updates are already jitted inside

@@ -1166,7 +1166,11 @@ def compile_plan(eplan: ExecutionPlan, mesh=None, *, interpret: bool = True,
                 return inner(x)
             return f
 
-        return CompiledStencil(plan=eplan, fn=_checked(stepper.fn),
+        # fn routes through the stepper's __call__, not stepper.fn: the
+        # host-side dist.* chaos wrapper lives there (a no-op global
+        # read unless a FaultPlan is active; the jitted executable and
+        # its ppermute census are identical either way)
+        return CompiledStencil(plan=eplan, fn=_checked(stepper),
                                global_fn=_checked(stepper.global_fn),
                                stepper=stepper)
 

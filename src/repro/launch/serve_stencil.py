@@ -69,7 +69,14 @@ through :mod:`repro.runtime.chaos`:
              the round-robin rotation; its sticky shape groups remap to
              surviving devices.  After ``evict_cooldown_s`` it rejoins
              on probation (one strike re-evicts with doubled cooldown)
-             and takes one remapped group back as the probe.
+             and takes one remapped group back as the probe.  A
+             MESH-sharded group (``mesh_shape=`` serving) takes the
+             partial-mesh rung instead: the eviction SHRINKS the group's
+             mesh over the surviving devices (same halving rule as
+             ``rollout.executor.shrink_mesh`` — same global grid, fewer
+             devices), re-homes it on the shrunk mesh's lead device, and
+             counts ``stats()["faults"]["mesh_shrinks"]`` — the serving
+             mirror of the rollout executor's reshard-on-failure.
   shed       when the deadline-miss rate over the last ``shed_window``
              deadline-carrying requests crosses ``shed_miss_rate``, the
              lowest-priority class of PENDING requests is shed (their
@@ -98,6 +105,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.plan_cache import PlanCache
 from repro.core.planner import StencilProblem
@@ -124,6 +132,21 @@ def _bucket(n: int, max_batch: int) -> int:
 
 def _shape_str(shape: tuple[int, ...]) -> str:
     return "x".join(str(n) for n in shape)
+
+
+def _shrunk_shape(shape: tuple[int, ...]) -> tuple[int, ...] | None:
+    """One rung down the mesh-shrink ladder: halve the largest axis with
+    size > 1 (collapse an odd one to 1) — the same rule as
+    :func:`repro.rollout.executor.shrink_mesh`, shape-only so the server
+    can pick WHICH surviving devices fill it.  ``None`` when the mesh is
+    already a single device."""
+    sizes = [(n, j) for j, n in enumerate(shape) if n > 1]
+    if not sizes:
+        return None
+    _, j = max(sizes)
+    out = list(shape)
+    out[j] = out[j] // 2 if out[j] % 2 == 0 else 1
+    return tuple(out)
 
 
 @dataclasses.dataclass(eq=False)
@@ -161,6 +184,7 @@ class _Request:
     deadline_s: float | None = None
     rollout: _RolloutTask | None = None
     priority: int = 0
+    attempts: int = 0        # dispatch attempts of the CURRENT hop
 
 
 @dataclasses.dataclass(eq=False)
@@ -202,8 +226,14 @@ class ServeStats:
     failures, including injected ones), ``retries`` (failed buckets
     requeued under a retry budget), ``fallbacks`` (shape groups degraded
     to the fallback backend), ``evictions`` (devices removed from the
-    rotation) and ``shed`` (pending requests dropped under deadline
-    pressure).
+    rotation), ``mesh_shrinks`` (mesh-sharded groups whose mesh shrank
+    over the survivors of an eviction instead of remapping) and ``shed``
+    (pending requests dropped under deadline pressure).
+    ``rollout_attempts``/``rollout_recovered`` mirror the rollout
+    executor's :class:`~repro.rollout.executor.RolloutResult` counters
+    at serving granularity: total dispatch attempts of rollout segment
+    buckets, and rollout requests whose segment settled only after at
+    least one retry.
     """
 
     requests: int = 0
@@ -217,6 +247,9 @@ class ServeStats:
     retries: int = 0
     fallbacks: int = 0
     evictions: int = 0
+    mesh_shrinks: int = 0
+    rollout_attempts: int = 0
+    rollout_recovered: int = 0
     shed: int = 0
     latencies_s: list = dataclasses.field(default_factory=list, repr=False)
 
@@ -274,7 +307,13 @@ class StencilServer:
     path is bit-exact against.  ``admission=False`` disables the
     bucket-cliff cap.  ``devices`` (e.g. ``jax.devices()``) shards the
     server: shape groups route round-robin, one ``PlanCache`` per
-    device.
+    device.  ``mesh_shape=(4,)`` (with ``devices=``) switches to
+    MESH-sharded serving instead: each shape group's states are sharded
+    over a device mesh of that shape (axis names ``mesh_axes``, spatial
+    mapping ``grid_axes`` — defaults ``gx/gy/...`` on the leading grid
+    axes) and advanced by the fused distributed stepper; an eviction
+    then SHRINKS the group's mesh over the survivors (same halving rule
+    as the rollout executor's reshard-on-failure) rather than remapping.
 
     Fault handling (module docstring; DESIGN.md §Robustness):
     ``restart`` is the per-shape-group retry-budget TEMPLATE (cloned per
@@ -298,6 +337,9 @@ class StencilServer:
                  async_dispatch: bool = True,
                  admission: bool = True, admission_rtol: float = 0.0,
                  devices: Sequence | None = None,
+                 mesh_shape: Sequence[int] | None = None,
+                 mesh_axes: Sequence[str] | None = None,
+                 grid_axes: Sequence[str] | None = None,
                  restart: RestartPolicy | None = None,
                  fallback_after: int | None = 2,
                  fallback_backends: Sequence[str] = ("jnp",),
@@ -332,6 +374,34 @@ class StencilServer:
         if devices is not None and not list(devices):
             raise ValueError("devices must be non-empty when given")
         self._devices = list(devices) if devices is not None else [None]
+        # mesh-sharded serving: each shape group's states are sharded
+        # over a Mesh of this shape spanning the server's devices; an
+        # eviction SHRINKS a group's mesh instead of remapping it
+        if mesh_shape is not None:
+            if devices is None:
+                raise ValueError("mesh_shape serving needs an explicit "
+                                 "devices= list to build meshes from")
+            self.mesh_shape = tuple(int(n) for n in mesh_shape)
+            if int(np.prod(self.mesh_shape)) > len(self._devices):
+                raise ValueError(f"mesh_shape {self.mesh_shape} needs "
+                                 f"{int(np.prod(self.mesh_shape))} devices, "
+                                 f"got {len(self._devices)}")
+            naxes = len(self.mesh_shape)
+            self.mesh_axes = (tuple(mesh_axes) if mesh_axes is not None
+                              else ("gx", "gy", "gz", "gw")[:naxes])
+            if len(self.mesh_axes) != naxes:
+                raise ValueError("one mesh axis name per mesh_shape axis")
+            self.grid_axes = (tuple(grid_axes) if grid_axes is not None
+                              else self.mesh_axes
+                              + ("",) * (spec.ndim - naxes))
+            if len(self.grid_axes) != spec.ndim:
+                raise ValueError(f"grid_axes needs {spec.ndim} entries "
+                                 f"('' = unsharded axis)")
+        else:
+            if mesh_axes is not None or grid_axes is not None:
+                raise ValueError("mesh_axes/grid_axes need mesh_shape")
+            self.mesh_shape = None
+            self.mesh_axes = self.grid_axes = ()
         base = cache if cache is not None else PlanCache(
             hw=hw, interpret=interpret)
         #: one PlanCache per device — jit executables are per-device, so
@@ -351,6 +421,7 @@ class StencilServer:
         self._next_ticket = 0
         self._caps: dict[tuple[int, ...], int] = {}
         self._group_dev: dict[tuple[int, ...], int] = {}
+        self._group_mesh: dict[tuple[int, ...], Mesh] = {}
         self._rr = 0                    # round-robin cursor (active devices)
         # degradation-ladder state -----------------------------------------
         self._retry: dict[tuple[int, ...], RestartPolicy] = {}
@@ -627,11 +698,14 @@ class StencilServer:
 
     # -- execution ---------------------------------------------------------
     def _problem(self, shape: tuple[int, ...], batch: int,
-                 steps: int | None = None) -> StencilProblem:
+                 steps: int | None = None,
+                 mesh: Mesh | None = None) -> StencilProblem:
+        kw = ({"mesh": mesh, "grid_axes": self.grid_axes}
+              if mesh is not None else {})
         return StencilProblem(self.spec, shape, dtype=self.dtype,
                               boundary=self.boundary,
                               steps=self.steps if steps is None else steps,
-                              batch=batch)
+                              batch=batch, **kw)
 
     def _plan_kwargs(self, shape: tuple[int, ...] | None = None) -> dict:
         """Planner pins for one shape group — the DEGRADED pin once the
@@ -649,8 +723,19 @@ class StencilServer:
     def _device_of(self, shape: tuple[int, ...]) -> int:
         """Round-robin shape-group -> device assignment (sticky, so a
         group's buckets always hit the same cache + jit executables;
-        evicted devices are skipped)."""
+        evicted devices are skipped).  Under mesh serving the group's
+        home is its mesh's LEAD device — failure attribution and cache
+        selection follow the mesh, not the round-robin cursor."""
         with self._lock:
+            if self.mesh_shape is not None:
+                mesh = self._group_mesh_for(shape)
+                di = self._dev_index(mesh.devices.flat[0])
+                if self._group_dev.get(shape) != di:
+                    self._group_dev[shape] = di
+                    name = _shape_str(shape)
+                    if name not in self._device_stats[di]["shapes"]:
+                        self._device_stats[di]["shapes"].append(name)
+                return di
             di = self._group_dev.get(shape)
             if di is None or self._evicted_until[di] is not None:
                 active = self._active_devices() or [0]
@@ -662,9 +747,59 @@ class StencilServer:
                     self._device_stats[di]["shapes"].append(name)
             return di
 
+    def _dev_index(self, dev) -> int:
+        for i, d in enumerate(self._devices):
+            if d is dev:
+                return i
+        return 0
+
+    def _group_mesh_for(self, shape: tuple[int, ...]) -> Mesh:
+        """The shape group's serving mesh, built lazily over the ACTIVE
+        devices at the configured ``mesh_shape`` (shrunk down the same
+        halving ladder if evictions already thinned the rotation below
+        it).  Once built the mesh is sticky — it changes only through
+        :meth:`_evict_device`'s shrink rung (lock held)."""
+        mesh = self._group_mesh.get(shape)
+        if mesh is None:
+            active = [self._devices[i] for i in self._active_devices()]
+            mshape: tuple[int, ...] | None = self.mesh_shape
+            while int(np.prod(mshape)) > len(active):
+                mshape = _shrunk_shape(mshape)
+                if mshape is None:   # unreachable: the last device stays
+                    raise RuntimeError("no active devices left for a mesh")
+            n = int(np.prod(mshape))
+            mesh = Mesh(np.array(active[:n], dtype=object).reshape(mshape),
+                        self.mesh_axes)
+            self._group_mesh[shape] = mesh
+        return mesh
+
+    def _shrink_group_mesh(self, mesh: Mesh) -> Mesh | None:
+        """The largest halving of ``mesh`` that fits on its surviving
+        (non-evicted) devices, preserving their order — ``None`` when a
+        single-device mesh cannot shrink further (lock held)."""
+        gone = {id(self._devices[i])
+                for i, u in enumerate(self._evicted_until) if u is not None}
+        survivors = [d for d in mesh.devices.flat if id(d) not in gone]
+        shape: tuple[int, ...] | None = tuple(mesh.devices.shape)
+        while True:
+            shape = _shrunk_shape(shape)
+            if shape is None:
+                return None
+            n = int(np.prod(shape))
+            if n <= len(survivors):
+                return Mesh(np.array(survivors[:n],
+                                     dtype=object).reshape(shape),
+                            self.mesh_axes)
+
     def _evict_device(self, di: int, now: float) -> None:
         """Remove one device from the rotation and remap its sticky
-        groups to survivors (lock held)."""
+        groups to survivors (lock held).  A MESH-sharded group whose
+        mesh contains the evicted device takes the partial-mesh rung
+        instead: its mesh SHRINKS over the surviving devices (same grid,
+        fewer devices — the serving mirror of the rollout executor's
+        reshard-on-failure) and the group re-homes on the shrunk mesh's
+        lead device; only a mesh that cannot shrink falls back to the
+        plain rebuild-over-survivors remap."""
         if len(self._active_devices()) <= 1:
             return                        # never evict the last device
         self._evicted_until[di] = now + self._dev_cooldown[di]
@@ -675,7 +810,24 @@ class StencilServer:
         self._device_stats[di]["evictions"] += 1
         self._device_stats[di]["evicted"] = True
         self.stats_.evictions += 1
-        moved = [s for s, d in self._group_dev.items() if d == di]
+        dead = self._devices[di]
+        shrunk: set[tuple[int, ...]] = set()
+        for shape, mesh in list(self._group_mesh.items()):
+            if dead is None or not any(d is dead for d in mesh.devices.flat):
+                continue
+            new_mesh = self._shrink_group_mesh(mesh)
+            if new_mesh is None:
+                # a 1-device mesh lost its device: rebuild lazily over
+                # whatever survives, via the normal remap path
+                del self._group_mesh[shape]
+                continue
+            self._group_mesh[shape] = new_mesh
+            self._group_dev[shape] = self._dev_index(new_mesh.devices.flat[0])
+            self._caps.pop(shape, None)   # new mesh -> new cache key/cap
+            self.stats_.mesh_shrinks += 1
+            shrunk.add(shape)
+        moved = [s for s, d in self._group_dev.items()
+                 if d == di and s not in shrunk]
         for shape in moved:
             del self._group_dev[shape]    # next _device_of reassigns
             self._remapped.setdefault(di, []).append(shape)
@@ -708,7 +860,11 @@ class StencilServer:
         """
         cap = self._caps.get(shape)
         if cap is None:
-            if self.admission and self.max_batch > 1:
+            # mesh serving skips the cliff walk: the admission model
+            # prices single-device plans, not per-shard distributed ones
+            if self.mesh_shape is not None:
+                cap = self.max_batch
+            elif self.admission and self.max_batch > 1:
                 di = self._device_of(shape)
                 cap = self.caches[di].bucket_cap(
                     self._problem(shape, 1), self.max_batch,
@@ -735,16 +891,30 @@ class StencilServer:
         batch_arr = jnp.stack(states)
         di = self._device_of(shape)
         dev = self._devices[di]
-        if dev is not None:
-            batch_arr = jax.device_put(batch_arr, dev)
-        seg = chunk[0].rollout.current if chunk[0].rollout else None
+        with self._lock:
+            mesh = (self._group_mesh_for(shape)
+                    if self.mesh_shape is not None else None)
+            seg = chunk[0].rollout.current if chunk[0].rollout else None
+            for r in chunk:
+                r.attempts += 1
+            if seg is not None:
+                self.stats_.rollout_attempts += len(chunk)
+        arg = batch_arr[0] if b == 1 else batch_arr
+        if mesh is not None:
+            lead = [None] if b > 1 else []
+            axes = [a if a else None for a in self.grid_axes]
+            arg = jax.device_put(arg, NamedSharding(
+                mesh, PartitionSpec(*(lead + axes))))
+        elif dev is not None:
+            arg = jax.device_put(arg, dev)
         if seg is not None:
             program = RolloutProgram(
-                self._problem(shape, b, steps=seg.steps), (seg,))
-            entry = self.caches[di].get_program(program,
+                self._problem(shape, b, steps=seg.steps, mesh=mesh), (seg,))
+            entry = self.caches[di].get_program(program, mesh=mesh,
                                                **self._plan_kwargs(shape))
         else:
-            entry = self.caches[di].get(self._problem(shape, b),
+            entry = self.caches[di].get(self._problem(shape, b, mesh=mesh),
+                                        mesh=mesh,
                                         **self._plan_kwargs(shape))
         chaos.fire("serve.dispatch", shape=_shape_str(shape), device=di,
                    bucket=b)
@@ -752,7 +922,7 @@ class StencilServer:
         # dispatch only — readiness (and the entry's success accounting)
         # is deferred to _settle, so a failed first call stays cold and
         # host-side prep of the next bucket overlaps this device work
-        out = entry.dispatch(batch_arr[0] if b == 1 else batch_arr)
+        out = entry.dispatch(arg)
         return _InFlight(shape=shape, requests=list(chunk), bucket=b,
                          entry=entry, out=out, t0=t0, device=di,
                          segment=seg)
@@ -992,6 +1162,10 @@ class StencilServer:
                         continue
                     if r.rollout is not None:
                         task = r.rollout
+                        if r.attempts > 1:
+                            # this segment settled only after a retry —
+                            # the serving mirror of RolloutResult.recovered
+                            st.rollout_recovered += 1
                         task.seg += 1
                         task.done_steps += fb.segment.steps
                         if fb.segment.emit:
@@ -1000,9 +1174,10 @@ class StencilServer:
                         if not task.done:
                             # requeue for the next segment, preserving the
                             # submit clock (latency spans the whole
-                            # program)
-                            self._pending.append(
-                                dataclasses.replace(r, state=res))
+                            # program) but with a fresh attempt count for
+                            # the next hop
+                            self._pending.append(dataclasses.replace(
+                                r, state=res, attempts=0))
                             continue
                     self._done[r.ticket] = res
                     st.requests += 1
@@ -1112,10 +1287,17 @@ class StencilServer:
                 "retries": st.retries,
                 "fallbacks": st.fallbacks,
                 "evictions": st.evictions,
+                "mesh_shrinks": st.mesh_shrinks,
+                "rollout_attempts": st.rollout_attempts,
+                "rollout_recovered": st.rollout_recovered,
                 "shed": st.shed,
             }
             s["degraded"] = {_shape_str(shape): list(b) for shape, b
                              in sorted(self._group_backends.items())}
+            if self.mesh_shape is not None:
+                s["meshes"] = {
+                    _shape_str(shape): _shape_str(m.devices.shape)
+                    for shape, m in sorted(self._group_mesh.items())}
             s["stepper"] = {"running": self.running,
                             "error": str(self._stepper_error)
                             if self._stepper_error else None}

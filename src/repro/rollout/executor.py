@@ -32,16 +32,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
 from repro.checkpoint.checkpointer import CheckpointManager, restore_checkpoint
 from repro.core.planner import compile_plan
 from repro.rollout.planning import RolloutPlan, plan_program
 from repro.rollout.program import (RolloutProgram, build_update,
                                    segment_out_grid)
 from repro.runtime import chaos
+from repro.runtime.chaos import FaultError
 from repro.runtime.fault_tolerance import supervised
 
 __all__ = ["CompiledRollout", "RolloutResult", "compile_program",
-           "run_checkpointed"]
+           "run_checkpointed", "shrink_mesh"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +53,22 @@ class RolloutResult:
 
     ``emits`` pairs each emitting segment's CUMULATIVE step count with
     its post-update state.
+
+    ``attempts[i]`` counts how many times segment ``i`` was DISPATCHED
+    (1 = clean first try; 0 = skipped by a checkpoint resume) and
+    ``recovered[i]`` flags segments whose surviving state came from a
+    retry (attempt > 1) — the previously-unrecorded fact of WHICH
+    attempt produced each checkpoint.  ``resharded`` counts mesh-shrink
+    recoveries (``run_checkpointed`` rebuilding the distributed stepper
+    on fewer devices after a ``dist.*`` fault exhausted a segment's
+    retry budget).
     """
 
     final: Any
     emits: tuple[tuple[int, Any], ...] = ()
+    attempts: tuple[int, ...] = ()
+    recovered: tuple[int, ...] = ()
+    resharded: int = 0
 
     def emit_dict(self) -> dict[int, Any]:
         return dict(self.emits)
@@ -73,6 +88,8 @@ class CompiledRollout:
     program: RolloutProgram
     sweeps: tuple[Callable, ...]          # one jitted fused sweep per segment
     updates: tuple[Callable | None, ...]  # jitted pointwise update or None
+    mesh: Any = None                      # live Mesh of distributed sweeps
+    interpret: bool = True                # recorded for reshard recompiles
 
     def run_segment(self, i: int, x):
         """Advance one segment: fused sweep, then the update op."""
@@ -106,7 +123,7 @@ class CompiledRollout:
 
 
 def compile_program(rplan: RolloutPlan | RolloutProgram, *,
-                    interpret: bool = True, hw=None,
+                    interpret: bool = True, hw=None, mesh=None,
                     **plan_kwargs) -> CompiledRollout:
     """Materialize a rollout plan (planning first if given a program).
 
@@ -115,6 +132,13 @@ def compile_program(rplan: RolloutPlan | RolloutProgram, *,
     output shape).  The per-segment sweep is exactly the single-sweep
     ``compile_plan`` executable, so everything proven about fused sweeps
     (bit-exactness per strategy, boundary handling) holds per segment.
+
+    Mesh-sharded programs (the problem carries a ``mesh``, or the plan's
+    segments record a ``sharding``) compile each segment to the fused
+    distributed stepper — one ``t*r``-deep exchange per fused chunk,
+    exactly the single-sweep executable again.  ``mesh`` binds the live
+    device mesh (default: rebuilt from the recorded shape, as in
+    ``compile_plan``); it never enters the plan or the program digest.
     """
     if isinstance(rplan, RolloutProgram):
         rplan = plan_program(rplan, hw, **plan_kwargs)
@@ -127,7 +151,13 @@ def compile_program(rplan: RolloutPlan | RolloutProgram, *,
         pj = p.to_json()
         fn = sweep_by_plan.get(pj)
         if fn is None:
-            fn = jax.jit(compile_plan(p, interpret=interpret).fn)
+            cp = compile_plan(p, mesh=mesh, interpret=interpret)
+            # distributed sweeps are already jitted inside the stepper
+            # (and their host-side chaos wrapper must NOT be traced);
+            # single-device fns pick up their jit here as before
+            fn = cp.fn if p.sharding is not None else jax.jit(cp.fn)
+            if p.sharding is not None and mesh is None:
+                mesh = cp.stepper.mesh
             sweep_by_plan[pj] = fn
         sweeps.append(fn)
         if seg.update is None:
@@ -142,7 +172,72 @@ def compile_program(rplan: RolloutPlan | RolloutProgram, *,
             update_by_key[ukey] = ufn
         updates.append(ufn)
     return CompiledRollout(plan=rplan, program=program,
-                           sweeps=tuple(sweeps), updates=tuple(updates))
+                           sweeps=tuple(sweeps), updates=tuple(updates),
+                           mesh=mesh, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Reshard-on-failure: shrink the mesh, keep the plan
+# ---------------------------------------------------------------------------
+
+def _is_dist_fault(err: BaseException | None) -> bool:
+    """Did this failure originate at a ``dist.*`` chaos site (an injected
+    mesh fault — the class of error a smaller mesh survives)?"""
+    while err is not None:
+        if isinstance(err, FaultError) and err.site.startswith("dist."):
+            return True
+        err = err.__cause__
+    return False
+
+
+def shrink_mesh(mesh: Mesh) -> Mesh:
+    """The next-smaller mesh after losing devices: halve the largest
+    axis (same axis names, same GLOBAL grid — local blocks double).
+
+    Keeps the leading surviving devices of the old mesh's device array;
+    an even axis halves (preserving grid divisibility: any grid an
+    N-way axis divided, N/2 divides too), an odd one collapses to 1.
+    Raises when the mesh is already 1x...x1.
+    """
+    shape = list(mesh.devices.shape)
+    sizes = [(n, j) for j, n in enumerate(shape) if n > 1]
+    if not sizes:
+        raise ValueError(f"mesh {tuple(shape)} cannot shrink further")
+    _, j = max(sizes)
+    shape[j] = shape[j] // 2 if shape[j] % 2 == 0 else 1
+    survivors = mesh.devices.reshape(-1)[: int(np.prod(shape))]
+    return Mesh(survivors.reshape(shape), mesh.axis_names)
+
+
+def _reshard_compiled(compiled: CompiledRollout,
+                      new_mesh: Mesh) -> CompiledRollout:
+    """Rebuild every distributed sweep on ``new_mesh``, REUSING the
+    frozen segment plans (same fuse schedule / backend / block — only
+    the recorded mesh shape changes), so the resumed numerics are the
+    already-proven fused-sweep executables on bigger local blocks."""
+    new_shape = [int(n) for n in new_mesh.devices.shape]
+    plans = tuple(
+        dataclasses.replace(p, sharding={**p.sharding,
+                                         "mesh_shape": new_shape})
+        if p.sharding is not None else p
+        for p in compiled.plan.segment_plans)
+    rplan = dataclasses.replace(compiled.plan, segment_plans=plans)
+    return compile_program(rplan, interpret=compiled.interpret,
+                           mesh=new_mesh)
+
+
+def _state_sharding(compiled: CompiledRollout) -> NamedSharding | None:
+    """The NamedSharding rollout states live under (None if the program
+    is single-device)."""
+    if compiled.mesh is None:
+        return None
+    p0 = next((p for p in compiled.plan.segment_plans
+               if p.sharding is not None), None)
+    if p0 is None:
+        return None
+    lead = [None] if p0.batch > 1 else []
+    axes = [a if a else None for a in p0.sharding["grid_axes"]]
+    return NamedSharding(compiled.mesh, P(*(lead + axes)))
 
 
 # ---------------------------------------------------------------------------
@@ -202,10 +297,23 @@ def run_checkpointed(compiled: CompiledRollout, x, *,
 
     Resume walks the retained checkpoints NEWEST-FIRST: a torn or
     corrupt latest checkpoint (truncated manifest, unreadable shards —
-    e.g. a chaos-injected torn write) is skipped in favor of the
-    previous retained one (the ``keep_last`` window exists precisely so
-    a bad latest is not fatal); only a checkpoint that restores cleanly
-    but belongs to a DIFFERENT program raises.
+    e.g. a chaos-injected torn write, or a single torn SHARD caught by
+    its manifest digest) is skipped in favor of the previous retained
+    one (the ``keep_last`` window exists precisely so a bad latest is
+    not fatal); only a checkpoint that restores cleanly but belongs to
+    a DIFFERENT program raises.
+
+    Mesh-sharded programs add a LAST rung under the same supervision:
+    when a ``dist.*`` fault (an injected mesh failure — lost device,
+    failed chunk dispatch, corrupted exchange) exhausts a segment's
+    retry budget, the executor RESHARDS instead of dying — it rebuilds
+    every distributed sweep on the next-smaller mesh (same global grid,
+    same frozen per-segment plans, bigger local blocks), reloads the
+    newest intact shard checkpoint re-sharded to the new topology (or
+    re-shards the in-memory segment state when running uncheckpointed),
+    and re-runs the segment under a fresh budget.  The resumed emits are
+    bit-exact vs the fault-free mesh run.  Checkpoints written after a
+    reshard carry the new, smaller shard layout.
     """
     program = compiled.program
     n = len(program.segments)
@@ -235,19 +343,63 @@ def run_checkpointed(compiled: CompiledRollout, x, *,
                          for k, v in sorted(tree.get("emits", {}).items())]
                 break
 
+    attempts = [0] * n
+    recovered = [0] * n
+    resharded = 0
     t = sum(s.steps for s in program.segments[:start])
     for i in range(start, n):
-        seg_start = x
+        seg = {"x": x}
 
-        def _attempt(attempt: int, i=i, seg_start=seg_start):
-            y = compiled.run_segment(i, seg_start)
+        def _attempt(attempt: int, i=i, seg=seg):
+            attempts[i] += 1
+            y = compiled.run_segment(i, seg["x"])
             chaos.fire("rollout.segment", segment=int(i),
                        attempt=int(attempt))
             if fault_injector is not None:
                 fault_injector(i, attempt)
             return jax.block_until_ready(y)
 
-        x = supervised(_attempt, restart=restart, monitor=monitor, step=i)
+        while True:
+            try:
+                x = supervised(_attempt, restart=restart, monitor=monitor,
+                               step=i)
+                break
+            except RuntimeError as e:
+                if compiled.mesh is None or not _is_dist_fault(e.__cause__):
+                    raise
+                # a mesh fault burned the whole retry budget: shrink the
+                # mesh (raises when already 1x..x1 — then the failure is
+                # real), rebuild the sweeps, reload the newest intact
+                # shard checkpoint re-sharded to the survivors, re-run
+                # the segment on the fresh budget on_failure just reset
+                compiled = _reshard_compiled(compiled, shrink_mesh(compiled.mesh))
+                shd = _state_sharding(compiled)
+                restored = False
+                if mgr is not None:
+                    for step0 in reversed(mgr.steps()):
+                        try:
+                            target = _manifest_target(directory, step0)
+                            tree, extra = restore_checkpoint(
+                                directory, step0, target,
+                                shardings=jax.tree.map(lambda _: shd, target))
+                        except Exception:
+                            continue
+                        if extra.get("program") != program.digest() or \
+                                int(extra["segment"]) != i:
+                            continue
+                        seg["x"] = tree["state"]
+                        emits = [(int(k), v) for k, v in
+                                 sorted(tree.get("emits", {}).items())]
+                        restored = True
+                        break
+                if not restored:
+                    # uncheckpointed (or the segment predates any save):
+                    # the in-memory start state re-shards onto the
+                    # shrunk mesh directly
+                    seg["x"] = jax.device_put(seg["x"], shd)
+                resharded += 1
+        if attempts[i] > 1:
+            recovered[i] = 1
         t += program.segments[i].steps
         if program.segments[i].emit:
             emits.append((t, x))
@@ -256,4 +408,6 @@ def run_checkpointed(compiled: CompiledRollout, x, *,
                      extra={"program": program.digest(),
                             "segment": i + 1, "step": t})
     return RolloutResult(final=jnp.asarray(x), emits=tuple(
-        (int(s), jnp.asarray(a)) for s, a in emits))
+        (int(s), jnp.asarray(a)) for s, a in emits),
+        attempts=tuple(attempts), recovered=tuple(recovered),
+        resharded=resharded)

@@ -256,10 +256,13 @@ class RolloutProgram:
         object.__setattr__(self, "segments", as_segments(self.segments))
         if not self.segments:
             raise ValueError("a rollout program needs >= 1 segment")
-        if self.problem.mesh is not None:
-            raise ValueError("distributed rollout programs are not yet "
-                             "supported; plan per-device problems "
-                             "(ROADMAP: mesh rollouts)")
+        # mesh-sharded programs: segment_problem() preserves the mesh
+        # (dataclasses.replace), so every segment plans and compiles to
+        # the fused distributed stepper.  The mesh object itself stays
+        # OUT of to_dict()/digest() — like compile_plan, the mesh is a
+        # compile-time binding, which is what lets a reshard-on-failure
+        # resume restore a shard checkpoint under the SAME digest on a
+        # smaller mesh.
         for i in range(len(self.segments)):
             # fail at construction, not mid-flight: every segment's grid
             # must stay feasible (only 'valid' actually shrinks)

@@ -31,6 +31,24 @@ Fault sites (the instrumented points; see DESIGN.md §Robustness):
                           ``segment``, ``attempt``)
     ``rollout.update``    CompiledRollout.run_segment, after the
                           update op applied (ctx: ``segment``)
+    ``dist.device``       DistributedStepper call entry — a device
+                          dropping out of the mesh (ctx: ``devices``,
+                          ``mesh``)
+    ``dist.chunk``        DistributedStepper, once per fused chunk
+                          dispatch (ctx: ``chunk``, ``depth``,
+                          ``devices``, ``mesh``)
+    ``dist.exchange``     DistributedStepper, once per chunk's deep
+                          halo exchange (``action="corrupt"`` = the
+                          strips arrive corrupted; the stepper computes
+                          through them, detects via checksum and raises
+                          into the retry path) (ctx: ``chunk``,
+                          ``width``, ``devices``, ``mesh``)
+
+The ``dist.*`` sites fire from HOST-side wrappers around the jitted
+sharded executable (locks and exceptions are untraceable), so an active
+plan never changes the compiled program: the fault-free mesh path's
+jaxpr — and its ppermute count per fused chunk — is byte-identical with
+or without chaos instrumentation.
 
 Determinism: each rule owns an independent ``numpy`` Generator seeded
 from ``(plan seed, rule index)`` plus a per-rule call counter, so a
@@ -66,6 +84,9 @@ FAULT_SITES = (
     "checkpoint.read",
     "rollout.segment",
     "rollout.update",
+    "dist.device",
+    "dist.chunk",
+    "dist.exchange",
 )
 
 _ACTIONS = ("raise", "delay", "corrupt")
@@ -140,6 +161,9 @@ class FaultPlan:
         self._fires: list[int] = []
         #: every fired fault: (site, per-rule call index, action, ctx)
         self.log: list[tuple[str, int, str, dict]] = []
+        #: parallel record of WHICH rule fired each log entry:
+        #: (rule index, per-rule call index) — replay()'s raw material
+        self._rule_log: list[tuple[int, int]] = []
         self._lock = threading.Lock()
         for r in rules or ():
             self._append(r if isinstance(r, FaultRule) else FaultRule(**r))
@@ -178,6 +202,27 @@ class FaultPlan:
                     "by_site": {s: len([1 for t, *_ in self.log if t == s])
                                 for s in {r.site for r in self._rules}}}
 
+    def replay(self) -> "FaultPlan":
+        """Export the faults that FIRED as a new plan pinned to exact
+        ``at=`` call indices — no randomness left.
+
+        One rule per original rule (same site / match / action, so the
+        per-rule matching-call numbering is identical), with ``rate=0``
+        and ``at=`` the per-rule indices that actually fired.  Running
+        the replayed plan against the same call pattern reproduces the
+        original run's faults exactly — the debug handle for a failure
+        that looks nondeterministic but was seeded.
+        """
+        with self._lock:
+            fired: dict[int, list[int]] = {}
+            for ri, idx in self._rule_log:
+                fired.setdefault(ri, []).append(idx)
+            rules = [dataclasses.replace(
+                r, rate=0.0, times=None,
+                at=tuple(sorted(set(fired.get(i, ())))))
+                for i, r in enumerate(self._rules)]
+        return FaultPlan(seed=self.seed, rules=rules)
+
     # -- the hook ----------------------------------------------------------
     def fire(self, site: str, **ctx) -> str | None:
         """Evaluate the plan at one site visit; raise / delay / return.
@@ -205,6 +250,7 @@ class FaultPlan:
                     continue
                 self._fires[i] += 1
                 self.log.append((site, idx, r.action, dict(ctx)))
+                self._rule_log.append((i, idx))
                 if r.action == "raise":
                     err = FaultError(site, idx, r.message)
                 elif r.action == "delay":

@@ -126,6 +126,41 @@ def test_fault_plan_validation_and_activation():
         chaos.fire("serve.settle")
 
 
+def test_fault_plan_replay_round_trip():
+    """``replay()`` exports the FIRED faults as a rate-0 plan pinned to
+    the exact per-rule matching-call indices: replayed against the same
+    call pattern it reproduces the original run's outcomes and log
+    byte-for-byte, even with several interleaved match-filtered rules —
+    and replaying a replay is a fixed point."""
+    plan = (chaos.FaultPlan(seed=11)
+            .rule("serve.settle", rate=0.4, match={"device": 0})
+            .rule("serve.dispatch", rate=0.3, action="corrupt"))
+
+    def drive(p):
+        outcomes = []
+        with p:
+            for i in range(24):
+                for site in ("serve.dispatch", "serve.settle"):
+                    try:
+                        out = chaos.fire(site, shape="16x16", device=i % 2)
+                        outcomes.append((site, i, out))
+                    except chaos.FaultError:
+                        outcomes.append((site, i, "raise"))
+        return outcomes
+
+    o1 = drive(plan)
+    assert plan.fired("serve.settle") > 0
+    assert plan.fired("serve.dispatch") > 0
+    rp = plan.replay()
+    assert all(r.rate == 0.0 and r.times is None for r in rp._rules)
+    assert [(r.site, r.action, r.match) for r in rp._rules] == \
+        [(r.site, r.action, r.match) for r in plan._rules]
+    assert drive(rp) == o1
+    assert rp.log == plan.log
+    rp2 = rp.replay()
+    assert [r.at for r in rp2._rules] == [r.at for r in rp._rules]
+
+
 # ---------------------------------------------------------------------------
 # Acceptance: bit-exact recovery under seeded dispatch/compile/settle faults
 # ---------------------------------------------------------------------------

@@ -1,0 +1,270 @@
+"""Distributed chaos: the ``dist.*`` fault sites, sharded checkpoints
+and reshard-on-failure recovery (DESIGN.md §Robustness, "Distributed
+failure ladder").
+
+Everything multi-device runs in subprocesses with 8 fake CPU devices
+(the main pytest process stays at 1 device by design — see the dry-run
+contract).  Fast single-scenario tests are tier-1; the exhaustive
+site x action x seed x mesh-shape matrix is ``slow`` (``make
+test-dist-chaos`` / ``make test-all``).
+"""
+import pytest
+
+from test_multidevice import run_with_devices
+
+# Shared subprocess prelude: a 3-segment mesh-sharded rollout program on
+# a 24x24 grid (divisible by every 1-axis mesh in the 8-device ladder).
+_PRELUDE = """
+import glob, os, tempfile
+import numpy as np, jax, jax.numpy as jnp
+from repro import api
+from repro.launch.mesh import make_mesh
+from repro.runtime import chaos
+from repro.runtime.fault_tolerance import RestartPolicy
+from repro.rollout.program import RolloutProgram, Segment, UpdateOp
+from repro.rollout.executor import compile_program, run_checkpointed, shrink_mesh
+
+SPEC = api.box(2, 1, seed=0)
+GRID = (24, 24)
+X = jnp.asarray(np.random.default_rng(0).normal(size=GRID), jnp.float32)
+
+def program(mesh, grid_axes=("gx", "")):
+    prob = api.StencilProblem(SPEC, GRID, boundary="periodic", steps=1,
+                              mesh=mesh, grid_axes=grid_axes)
+    return RolloutProgram(prob, [
+        Segment(2, emit=True),
+        Segment(2, UpdateOp("scale", {"factor": 0.5}), emit=True),
+        Segment(2, emit=True)])
+
+def bitsame(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+"""
+
+
+def test_dist_sites_fire_raise_and_corrupt():
+    """The host-side wrapper fires dist.chunk / dist.exchange /
+    dist.device; "raise" raises a FaultError carrying the site, "corrupt"
+    computes through a poisoned copy then raises (the result is
+    discarded), and an ACTIVE-but-idle plan leaves results
+    bit-identical."""
+    run_with_devices(_PRELUDE + """
+prob = api.StencilProblem(SPEC, GRID, boundary="periodic", steps=4,
+                          mesh=make_mesh((4,), ("gx",)), grid_axes=("gx", ""))
+run = api.compile(api.plan(prob, fuse=2, backends=["jnp"]), mesh=prob.mesh)
+y0 = np.asarray(run(X))
+
+plan = chaos.FaultPlan(seed=3).rule("dist.chunk", at=(1,))
+try:
+    with plan:
+        run(X)
+    raise SystemExit("dist.chunk never raised")
+except chaos.FaultError as e:
+    assert e.site == "dist.chunk", e.site
+assert plan.fired("dist.chunk") == 1
+site, idx, action, ctx = plan.log[0]
+assert ctx["devices"] == 4 and ctx["mesh"] == "4", ctx
+
+plan2 = chaos.FaultPlan(seed=3).rule("dist.exchange", at=(0,),
+                                     action="corrupt")
+try:
+    with plan2:
+        run(X)
+    raise SystemExit("dist.exchange corrupt never surfaced")
+except chaos.FaultError as e:
+    assert "checksum" in str(e), e
+
+plan3 = chaos.FaultPlan(seed=1).rule("dist.device", rate=0.0)
+with plan3:
+    y1 = np.asarray(run(X))
+assert np.array_equal(y0, y1), "idle plan changed bits"
+assert np.array_equal(y0, np.asarray(run(X))), "post-fault call dirty"
+""")
+
+
+def test_ppermute_census_unchanged_by_chaos_wrapper():
+    """The chaos wrapper is host-side only: the traced computation —
+    counted as ppermutes in the jaxpr — is identical with and without an
+    active plan, and matches chunks x sharded-axes x 2."""
+    run_with_devices(_PRELUDE + """
+prob = api.StencilProblem(SPEC, GRID, boundary="periodic", steps=4,
+                          mesh=make_mesh((4,), ("gx",)), grid_axes=("gx", ""))
+run = api.compile(api.plan(prob, fuse=2, backends=["jnp"]), mesh=prob.mesh)
+n0 = str(jax.make_jaxpr(run.global_fn)(X)).count("ppermute")
+with chaos.FaultPlan(seed=9).rule("dist.chunk", rate=1.0, times=0):
+    n1 = str(jax.make_jaxpr(run.global_fn)(X)).count("ppermute")
+assert n0 == n1, (n0, n1)
+assert n0 == 2 * 1 * 2, n0   # 2 fused chunks x 1 sharded axis x 2 dirs
+""")
+
+
+def test_reshard_recovery_bit_exact():
+    """The acceptance scenario: a dist.exchange fault storm exhausts
+    segment 1's retry budget mid-rollout, the executor reshards 4 -> 2
+    devices from the shard checkpoint, and every emit plus the final
+    state is BIT-exact vs the fault-free 4-device run (1-axis meshes of
+    >= 2 devices are a bit-exact family); the post-reshard checkpoint
+    carries the 2-shard layout."""
+    run_with_devices(_PRELUDE + """
+ref4 = run_checkpointed(compile_program(program(make_mesh((4,), ("gx",))),
+                                        backends=["jnp"]), X)
+ref2 = run_checkpointed(compile_program(program(make_mesh((2,), ("gx",))),
+                                        backends=["jnp"]), X)
+for (_, a), (_, b) in zip(ref4.emits, ref2.emits):
+    assert bitsame(a, b), "4-dev and 2-dev disagree fault-free"
+
+with tempfile.TemporaryDirectory() as d:
+    c4 = compile_program(program(make_mesh((4,), ("gx",))), backends=["jnp"])
+    plan = chaos.FaultPlan(seed=5).rule("dist.exchange", at=(1, 2, 3),
+                                        match={"chunk": 0})
+    with plan:
+        res = run_checkpointed(
+            c4, X, directory=d,
+            restart=RestartPolicy(max_failures=2, backoff_s=0.0))
+    assert plan.fired("dist.exchange") == 3
+    assert res.attempts == (1, 4, 1), res.attempts
+    assert res.recovered == (0, 1, 0), res.recovered
+    assert res.resharded == 1, res.resharded
+    for (sa, a), (sb, b) in zip(res.emits, ref4.emits):
+        assert sa == sb and bitsame(a, b), "reshard broke bit-exactness"
+    assert bitsame(res.final, ref4.final)
+    last = sorted(glob.glob(os.path.join(d, "step_*")))[-1]
+    shards = sorted(os.path.basename(p)
+                    for p in glob.glob(os.path.join(last, "shard_*")))
+    assert shards == ["shard_0.npz", "shard_1.npz"], shards
+""")
+
+
+def test_torn_shard_write_falls_back_to_previous_checkpoint():
+    """A torn single-SHARD write (file truncated, manifest + rename
+    completed) is caught by the per-shard manifest digest: restoring the
+    torn step raises, and a resume falls back to the newest intact
+    checkpoint and recomputes — bit-exact."""
+    run_with_devices(_PRELUDE + """
+from repro.checkpoint.checkpointer import restore_checkpoint, retained_steps
+mesh = make_mesh((4,), ("gx",))
+ref = run_checkpointed(compile_program(program(mesh), backends=["jnp"]), X)
+with tempfile.TemporaryDirectory() as d:
+    c = compile_program(program(mesh), backends=["jnp"])
+    # corrupt the SECOND checkpoint write (segment 1's, step 4): with a
+    # sharded tree the chaos hook truncates the highest-numbered shard
+    plan = chaos.FaultPlan(seed=0).rule("checkpoint.write", at=(1,),
+                                        action="corrupt")
+    with plan:
+        mid = run_checkpointed(c, X, directory=d)
+    assert bitsame(mid.final, ref.final)
+    assert retained_steps(d) == [2, 4, 6]
+    try:
+        restore_checkpoint(d, 4, {"state": X})
+        raise SystemExit("torn shard restored cleanly")
+    except ValueError as e:
+        assert "digest" in str(e), e
+    # resume=True walks newest-first: step 6 is intact, so a fresh run
+    # restores it and returns immediately with the same final state
+    c2 = compile_program(program(mesh), backends=["jnp"])
+    res = run_checkpointed(c2, X, directory=d)
+    assert bitsame(res.final, ref.final)
+    assert res.attempts == (0, 0, 0), res.attempts
+""")
+
+
+def test_cache_key_includes_mesh_shape():
+    """A reshard is a different executable: problems differing only in
+    mesh shape get different cache keys (and both differ from the
+    unsharded problem)."""
+    run_with_devices(_PRELUDE + """
+from repro.core.plan_cache import cache_key
+def key(mesh):
+    kw = {} if mesh is None else {"mesh": mesh, "grid_axes": ("gx", "")}
+    return cache_key(api.StencilProblem(SPEC, GRID, boundary="periodic",
+                                        steps=4, **kw))
+k4, k2, k0 = key(make_mesh((4,), ("gx",))), key(make_mesh((2,), ("gx",))), key(None)
+assert len({k4, k2, k0}) == 3, (k4, k2, k0)
+""")
+
+
+def test_server_eviction_shrinks_group_mesh():
+    """The serving mirror: under mesh serving an evicted device SHRINKS
+    the shape group's mesh over the survivors (counted in
+    stats()["faults"]["mesh_shrinks"]) instead of remapping, and the
+    shrunk-mesh results stay bit-exact vs the healthy mesh run."""
+    run_with_devices(_PRELUDE + """
+from repro.launch.serve_stencil import StencilServer
+states = [jnp.asarray(np.random.default_rng(s).normal(size=GRID),
+                      jnp.float32) for s in range(3)]
+healthy = StencilServer(SPEC, steps=4, backends=["jnp"], max_batch=1,
+                        devices=jax.devices(), mesh_shape=(4,))
+base = healthy.serve(states)
+assert healthy.stats()["meshes"] == {"24x24": "4"}
+
+srv = StencilServer(SPEC, steps=4, backends=["jnp"], max_batch=1,
+                    devices=jax.devices(), mesh_shape=(4,), evict_after=3)
+plan = chaos.FaultPlan(seed=0).rule("serve.settle", at=(0, 1, 2))
+with plan:
+    out = srv.serve(states)
+st = srv.stats()
+assert st["faults"]["evictions"] == 1, st["faults"]
+assert st["faults"]["mesh_shrinks"] == 1, st["faults"]
+assert st["meshes"] == {"24x24": "2"}, st["meshes"]
+for a, b in zip(base, out):
+    assert bitsame(a, b), "shrunk-mesh serving broke bit-exactness"
+
+# rollout serving on the mesh books the executor-mirror counters
+t = srv.submit_rollout(states[0], [(2, None, True), (2, None, False)])
+final = srv.flush()[t]
+st = srv.stats()
+assert st["faults"]["rollout_attempts"] == 2, st["faults"]
+assert st["faults"]["rollout_recovered"] == 0, st["faults"]
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mesh_shape,grid_axes", [
+    ((4,), ("gx", "")),
+    ((2, 2), ("gx", "gy")),
+])
+def test_dist_fault_matrix(mesh_shape, grid_axes):
+    """Exhaustive seeded matrix per mesh shape: site x action x seed,
+    random-rate rules.  Every cell must (a) recover within the
+    retry + reshard ladder, (b) be deterministic — the same plan seed
+    reproduces the identical fire log and identical result bytes — and
+    (c) round-trip through FaultPlan.replay()."""
+    run_with_devices(_PRELUDE + f"""
+MESH_SHAPE, GRID_AXES = {mesh_shape!r}, {grid_axes!r}
+ref = run_checkpointed(
+    compile_program(program(make_mesh(MESH_SHAPE, ("gx", "gy")[:len(MESH_SHAPE)]),
+                            GRID_AXES), backends=["jnp"]), X)
+
+def cell(site, action, seed):
+    plan = chaos.FaultPlan(seed=seed).rule(site, rate=0.3, times=3,
+                                           action=action)
+    mesh = make_mesh(MESH_SHAPE, ("gx", "gy")[:len(MESH_SHAPE)])
+    c = compile_program(program(mesh, GRID_AXES), backends=["jnp"])
+    with plan:
+        res = run_checkpointed(
+            c, X, restart=RestartPolicy(max_failures=2, backoff_s=0.0))
+    return plan, res
+
+for site in ("dist.exchange", "dist.chunk", "dist.device"):
+    for action in ("raise", "corrupt"):
+        for seed in (0, 1):
+            p1, r1 = cell(site, action, seed)
+            p2, r2 = cell(site, action, seed)
+            assert p1.log == p2.log, (site, action, seed)
+            assert bitsame(r1.final, r2.final), (site, action, seed)
+            assert r1.attempts == r2.attempts and \\
+                r1.resharded == r2.resharded, (site, action, seed)
+            # replay pins the fired indices exactly
+            rp = p1.replay()
+            mesh = make_mesh(MESH_SHAPE, ("gx", "gy")[:len(MESH_SHAPE)])
+            c = compile_program(program(mesh, GRID_AXES), backends=["jnp"])
+            with rp:
+                r3 = run_checkpointed(
+                    c, X,
+                    restart=RestartPolicy(max_failures=2, backoff_s=0.0))
+            assert rp.log == p1.log, (site, action, seed, rp.log, p1.log)
+            assert bitsame(r3.final, r1.final), (site, action, seed)
+            if r1.resharded == 0:
+                # no topology change: the faulted run matches fault-free
+                assert bitsame(r1.final, ref.final), (site, action, seed)
+print("matrix OK")
+""", timeout=600)

@@ -18,6 +18,6 @@ def test_readme_marked_blocks_execute():
     assert proc.returncode == 0, (
         f"docs-check failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
     assert "OK" in proc.stdout
-    # the README currently carries 9 executable blocks; keep this in sync
+    # the README currently carries 10 executable blocks; keep this in sync
     # so silently-skipped markers cannot pass
-    assert "9 block(s) executed" in proc.stdout, proc.stdout
+    assert "10 block(s) executed" in proc.stdout, proc.stdout

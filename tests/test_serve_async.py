@@ -295,3 +295,70 @@ def test_bench_serve_smoke_runs():
         f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
     assert "bench-serve smoke OK" in proc.stdout
     assert "admission cap" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Accessor/scheduler races: timeout expiry mid-settle, cancel vs requeue
+# ---------------------------------------------------------------------------
+
+def test_results_timeout_expires_mid_settle_then_claims():
+    """``results(ticket, timeout_s=...)`` expiring WHILE the ticket's
+    bucket is still settling raises ``TimeoutError`` without consuming
+    anything; a second blocking claim returns the correct result once
+    the (chaos-delayed) settle lands."""
+    from repro.runtime import chaos
+    spec = ss.box(2, 1, seed=0)
+    server = api.StencilServer(spec, 2, max_batch=2, backends=["jnp"])
+    rng = np.random.default_rng(0)
+    state = rng.normal(size=(16, 16)).astype(np.float32)
+    server.serve([state])          # warm: the injected delay dominates
+    plan = chaos.FaultPlan(seed=0).rule("serve.settle", action="delay",
+                                        delay_s=0.6, at=(0,))
+    server.start(poll_s=0.01)
+    try:
+        with plan:
+            t = server.submit(state)
+            with pytest.raises(TimeoutError):
+                server.results(t, timeout_s=0.05)
+            out = server.results(t, timeout_s=30.0)
+    finally:
+        server.stop()
+    assert plan.fired("serve.settle") == 1
+    np.testing.assert_allclose(np.asarray(out), _ref(state, spec, 2),
+                               atol=1e-4)
+    # the expired wait neither lost nor double-claimed the ticket
+    with pytest.raises(KeyError):
+        server.results(t)
+
+
+def test_cancel_races_requeued_bucket():
+    """A ticket cancelled while its FAILED bucket sits requeued is gone
+    for good: the retry bucket re-forms without it, the survivors settle
+    with correct values, and the cancelled ticket has no claimable
+    result."""
+    from repro.runtime import chaos
+    spec = ss.box(2, 1, seed=0)
+    server = api.StencilServer(
+        spec, 2, max_batch=4, backends=["jnp"], admission=False,
+        async_dispatch=False,
+        restart=api.RestartPolicy(max_failures=3, backoff_s=0.0))
+    rng = np.random.default_rng(3)
+    states = [rng.normal(size=(16, 16)).astype(np.float32)
+              for _ in range(3)]
+    tickets = [server.submit(s) for s in states]
+    plan = chaos.FaultPlan(seed=0).rule("serve.settle", at=(0,))
+    with plan:
+        server.step()   # sync mode: dispatch + failed settle + requeue
+        assert sorted(server.pending_tickets()) == sorted(tickets)
+        assert server.cancel(tickets[1]) is True
+        outs = server.flush()
+    assert sorted(outs) == sorted([tickets[0], tickets[2]])
+    for t, state in ((tickets[0], states[0]), (tickets[2], states[2])):
+        np.testing.assert_allclose(np.asarray(outs[t]),
+                                   _ref(state, spec, 2), atol=1e-4)
+    with pytest.raises(KeyError):
+        server.results(tickets[1])
+    st = server.stats()
+    assert st["faults"]["bucket_failures"] == 1
+    assert st["faults"]["retries"] == 1
+    assert st["requests"] == 2
